@@ -1,0 +1,24 @@
+"""Tables 4/5: capex comparison, local DRAM vs CXL pool."""
+from __future__ import annotations
+
+from repro.pool import breakeven_nodes, cost_table
+
+from .common import emit, write_csv
+
+
+def run(fast: bool = False) -> None:
+    rows = []
+    for r in cost_table():
+        label = "100B" if r.engram_gb == 200.0 else "400B"
+        rows.append([label, r.nodes, int(r.local_usd), int(r.pool_usd),
+                     int(r.savings_usd)])
+    write_csv("cost_table5",
+              ["engram", "nodes", "local_usd", "cxl_pool_usd", "savings_usd"],
+              rows)
+    for label, gb in (("100B", 200.0), ("400B", 800.0)):
+        emit(f"cost/breakeven_nodes_{label}", breakeven_nodes(gb) * 1e6,
+             f"pool cheaper beyond {breakeven_nodes(gb):.1f} nodes")
+
+
+if __name__ == "__main__":
+    run()

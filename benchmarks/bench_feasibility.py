@@ -1,0 +1,33 @@
+"""Table 1 / §3.2: the feasibility case study (Qwen3-32B-like point)."""
+from __future__ import annotations
+
+from repro.configs.base import ENGRAM_27B, EngramConfig
+from repro.pool import check_all_tiers, paper_case_study
+
+from .common import emit, write_csv
+
+
+def run(fast: bool = False) -> None:
+    e = EngramConfig(**ENGRAM_27B)
+    point = paper_case_study()
+    res = check_all_tiers(e, point)
+    rows = []
+    for tier, f in res.items():
+        rows.append([tier,
+                     round(f.bandwidth_required_Bps / 1e9, 3),
+                     round(f.bandwidth_available_Bps / 1e9, 3),
+                     f.bandwidth_ok,
+                     round(f.prefetch_window_s * 1e6, 1),
+                     round(f.retrieval_latency_s * 1e6, 1),
+                     f.latency_ok, f.ok])
+    write_csv("feasibility",
+              ["tier", "bw_req_GBs", "bw_avail_GBs", "bw_ok",
+               "window_us", "latency_us", "lat_ok", "ok"], rows)
+    emit("feasibility/bw_required_GBs",
+         res["CXL"].bandwidth_required_Bps / 1e9 * 1e6,  # keep us-units col
+         f"paper~0.7GB/s window={res['CXL'].prefetch_window_s*1e6:.0f}us "
+         f"cxl_ok={res['CXL'].ok} rdma_ok={res['RDMA'].ok}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Kernel-level microbench: the Engram gather + gated fuse hot paths.
+
+On this CPU container the *measured* numbers time the XLA lowering of the
+reference ops (the Pallas kernels target TPU and are validated in
+interpret mode by tests); the derived column reports the TPU-side roofline
+estimate for the same op (HBM-bound row gather)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ENGRAM_27B, EngramConfig
+from repro.kernels.engram_gather.ref import engram_gather_ref
+from repro.kernels.gated_fuse.ref import gated_fuse_ref
+from repro.roofline.analysis import HW
+
+from .common import emit, timeit, write_csv
+
+
+def run(fast: bool = False) -> None:
+    e = EngramConfig(**ENGRAM_27B)
+    rng = np.random.RandomState(0)
+    V = 16384                      # truncated table (CPU RAM)
+    tables = jnp.asarray(
+        rng.randn(e.n_tables, V, e.head_dim).astype(np.float32))
+    rows_csv = []
+    for B in ((64, 256) if fast else (64, 256, 1024)):
+        idx = jnp.asarray(rng.randint(0, V, (B, 1, e.n_tables)), jnp.int32)
+        t = timeit(jax.jit(engram_gather_ref), tables, idx, iters=5)
+        payload = B * e.bytes_per_token_layer
+        # TPU estimate: payload / HBM bw + per-DMA overhead hidden by pipeline
+        tpu_est = payload / HW["hbm_bw"]
+        rows_csv.append(["engram_gather", B, round(t * 1e6, 1),
+                         round(tpu_est * 1e9, 1)])
+        emit(f"kernels/engram_gather_b{B}", t * 1e6,
+             f"payload={payload/1024:.0f}KiB tpu_est={tpu_est*1e6:.2f}us")
+
+    d, F = 1280, 2560
+    h = jnp.asarray(rng.randn(256, d).astype(np.float32))
+    rows_in = jnp.asarray(rng.randn(256, F).astype(np.float32))
+    wg = jnp.asarray(rng.randn(d, d).astype(np.float32) / 36)
+    wp = jnp.asarray(rng.randn(F, d).astype(np.float32) / 50)
+    t = timeit(jax.jit(gated_fuse_ref), h, rows_in, wg, wp, iters=5)
+    flops = 2 * 256 * (d * d + F * d)
+    emit("kernels/gated_fuse_t256", t * 1e6,
+         f"flops={flops/1e6:.0f}M tpu_est={flops/HW['peak_flops']*1e6:.2f}us")
+    rows_csv.append(["gated_fuse", 256, round(t * 1e6, 1),
+                     round(flops / HW["peak_flops"] * 1e9, 1)])
+    write_csv("kernels", ["kernel", "batch", "measured_us", "tpu_est_ns"],
+              rows_csv)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Figs 3/5/6: Engram read latency vs retrieval batch size.
+
+Two sources, reported side by side:
+  * the calibrated tier simulator (DRAM / CXL / RDMA / CXL->GPU), which
+    reproduces the paper's measured curves;
+  * a real measured local gather (jit'd XLA take on this host) — the
+    "local DRAM" ground truth available in this container, anchoring the
+    simulator's DRAM curve.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ENGRAM_27B, ENGRAM_40B, EngramConfig
+from repro.pool.simulator import latency_sweep
+
+from .common import emit, timeit, write_csv
+
+BATCHES = (1, 8, 32, 64, 128, 256, 512, 1024)
+
+
+def measured_local_gather_us(ecfg: EngramConfig, batch: int,
+                             table_rows: int = 65536) -> float:
+    """Wall time of the actual Engram gather on this host's DRAM (table
+    truncated to fit CPU memory; per-segment cost is row-count-invariant
+    for sparse random access)."""
+    rng = np.random.RandomState(0)
+    tables = jnp.asarray(
+        rng.randn(ecfg.n_tables, table_rows, ecfg.head_dim).astype(np.float32))
+    idx = jnp.asarray(rng.randint(0, table_rows,
+                                  (batch, 1, ecfg.n_tables)), jnp.int32)
+
+    @jax.jit
+    def gather(t, i):
+        outs = [jnp.take(t[k], i[..., k], axis=0)
+                for k in range(t.shape[0])]
+        return jnp.stack(outs, axis=-2)
+
+    return timeit(gather, tables, idx, warmup=2, iters=5) * 1e6
+
+
+def run(fast: bool = False) -> None:
+    batches = BATCHES if not fast else (1, 64, 256)
+    for name, preset in (("engram27b", ENGRAM_27B), ("engram40b", ENGRAM_40B)):
+        e = EngramConfig(**preset)
+        sweep = latency_sweep(e, batch_sizes=batches)
+        rows = []
+        for i, b in enumerate(batches):
+            meas = measured_local_gather_us(e, b) if not fast else float("nan")
+            rows.append([b,
+                         round(sweep["DRAM"][i][1], 2),
+                         round(sweep["CXL"][i][1], 2),
+                         round(sweep["RDMA"][i][1], 2),
+                         round(sweep["CXL->GPU"][i][1], 2),
+                         round(meas, 2)])
+        write_csv(f"read_latency_{name}",
+                  ["batch", "dram_us", "cxl_us", "rdma_us", "cxl_gpu_us",
+                   "measured_local_us"], rows)
+        mid = len(batches) // 2
+        emit(f"read_latency/{name}/cxl_b{batches[mid]}",
+             sweep["CXL"][mid][1],
+             f"dram={sweep['DRAM'][mid][1]:.1f}us "
+             f"rdma={sweep['RDMA'][mid][1]:.1f}us")
+
+
+if __name__ == "__main__":
+    run()

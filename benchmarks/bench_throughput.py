@@ -1,0 +1,59 @@
+"""Table 2: end-to-end serving throughput — baseline vs +Engram(DRAM) vs
++Engram(CXL) [vs +Engram(RDMA), beyond-paper], on the real
+continuous-batching engine with a reduced model.
+
+Two readouts per variant:
+  * measured CPU wall-clock tokens/s (real compute incl. engram layers),
+  * tokens/s at the emulated production point (0.2 ms decode steps — a
+    per-layer window comparable to the paper's 56 us), where the pool
+    stall model decides whether retrieval hides in the prefetch window.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.launch.serve import run_once
+from repro.launch.train import reduced_config
+
+from .common import emit, write_csv
+
+EMULATED_STEP_S = 2e-4
+
+
+def run(fast: bool = False) -> None:
+    cfg = reduced_config("deepseek-7b")
+    requests = 6 if fast else 12
+    max_new = 6 if fast else 12
+    base_cfg = dataclasses.replace(cfg, engram=None)
+
+    rows = []
+    variants = [("baseline", base_cfg, None),
+                ("+Engram (DRAM)", cfg, "DRAM"),
+                ("+Engram (CXL)", cfg, "CXL"),
+                ("+Engram (RDMA)", cfg, "RDMA")]
+    for name, c, pool in variants:
+        _, stats = run_once(c, requests=requests, max_new=max_new, pool=pool,
+                            max_batch=4, max_len=64, warmup=not fast,
+                            emulate_step_s=EMULATED_STEP_S)
+        rows.append([name, round(stats.tokens_per_s, 2),
+                     round(stats.tokens_per_s_emulated, 1),
+                     round(stats.stall_s * 1e3, 3), stats.decode_steps,
+                     stats.generated_tokens])
+        emit(f"throughput/{name.replace(' ', '_')}",
+             1e6 / max(stats.tokens_per_s, 1e-9),
+             f"wall={stats.tokens_per_s:.1f}tok/s "
+             f"emulated={stats.tokens_per_s_emulated:.0f}tok/s "
+             f"stall={stats.stall_s*1e3:.2f}ms")
+    write_csv("throughput_table2",
+              ["config", "wall_tokens_per_s", "emulated_tokens_per_s",
+               "stall_ms", "decode_steps", "generated"], rows)
+
+    by = {r[0]: r[2] for r in rows}
+    # the paper's headline: CXL within ~1% of DRAM at the emulated point
+    ratio = by["+Engram (CXL)"] / max(by["+Engram (DRAM)"], 1e-9)
+    emit("throughput/cxl_vs_dram_ratio", ratio * 1e6,
+         f"paper: 5614/5684=0.988 (4B), emulated here={ratio:.3f}")
+
+
+if __name__ == "__main__":
+    run()

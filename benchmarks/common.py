@@ -1,0 +1,37 @@
+"""Benchmark utilities: timing + CSV output."""
+from __future__ import annotations
+
+import csv
+import time
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall seconds per call (blocks on jax outputs)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def write_csv(name: str, header: list, rows: list) -> Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{name}.csv"
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def emit(name: str, value_us: float, derived: str = "") -> None:
+    """The run.py contract: ``name,us_per_call,derived`` CSV on stdout."""
+    print(f"{name},{value_us:.3f},{derived}")

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows; per-table CSVs land in
+experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("read_latency", "Figs 3/5/6: Engram read latency vs batch"),
+    ("feasibility", "Table 1 / §3.2: feasibility case study"),
+    ("throughput", "Table 2: E2E serving throughput by pool tier"),
+    ("scalability", "Table 3: DP x nnode scaling"),
+    ("cost", "Tables 4/5: capex comparison"),
+    ("kernels", "Kernel microbenches (gather / gated fuse)"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, desc in BENCHES:
+        if args.only and args.only != name:
+            continue
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run(fast=args.fast)
+            print(f"# {name}: {desc} [{time.time() - t0:.1f}s]",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,27 @@
+"""Serve an Engram model with batched requests from a simulated CXL pool,
+reproducing the Table 2 comparison (baseline / +Engram DRAM / +Engram CXL).
+
+    PYTHONPATH=src python examples/serve_pooled.py [--requests 8]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+    return serve_main(["--arch", "deepseek-7b", "--reduced", "--compare",
+                       "--requests", str(args.requests),
+                       "--max-new", str(args.max_new),
+                       "--max-batch", "4", "--max-len", "64"])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,45 @@
+"""Regenerate the roofline report and splice §Dry-run/§Roofline into
+EXPERIMENTS.md (idempotent: replaces everything between the marker lines).
+
+    PYTHONPATH=src python experiments/finalize_report.py
+"""
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.roofline.report import (dryrun_table, levers_list, load_cells,
+                                   roofline_table, summary)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+BEGIN = "<!-- BEGIN GENERATED TABLES -->"
+END = "<!-- END GENERATED TABLES -->"
+
+
+def main():
+    cells = load_cells(ROOT / "experiments" / "dryrun")
+    s = summary(cells)
+    block = "\n".join([
+        BEGIN,
+        f"\n_Last regenerated with {s['ok']}/{s['total']} cells ok "
+        f"(pod1 {s['pod1']}/31, pod2 {s['pod2']}/31, fail {s['fail']})._",
+        "", "### Dry-run table (both meshes)", "", dryrun_table(cells),
+        "", "### Roofline table (single-pod baselines)", "",
+        roofline_table(cells),
+        "", "### Per-cell levers (what would move the dominant term)", "",
+        levers_list(cells), "", END,
+    ])
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    if BEGIN in md:
+        md = re.sub(re.escape(BEGIN) + ".*?" + re.escape(END), block,
+                    md, flags=re.S)
+    else:
+        md += "\n\n---\n\n## Generated dry-run + roofline tables\n\n" + block
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print(f"EXPERIMENTS.md updated: {s}")
+
+
+if __name__ == "__main__":
+    main()

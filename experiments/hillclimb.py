@@ -1,0 +1,67 @@
+"""Hillclimb driver: re-lower one cell with a named flag set and record the
+scaled roofline next to the baseline.
+
+    PYTHONPATH=src python experiments/hillclimb.py <arch> <shape> <tag> \
+        [flag=value ...]            # e.g. attn_bf16_scores=true
+
+Writes experiments/hillclimb/<arch>__<shape>__<tag>.json (+ .hlo.gz).
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+# must import dryrun first: it pins the 512 fake devices before jax init
+from repro.launch.dryrun import lower_cell                      # noqa: E402
+
+import json                                                      # noqa: E402
+
+
+def parse_flags(args):
+    out, rules = {}, {}
+    for a in args:
+        k, v = a.split("=", 1)
+        if k.startswith("rule:"):
+            rules[k[5:]] = tuple(v.split(",")) if v else ()
+            continue
+        if v.lower() in ("true", "false"):
+            v = v.lower() == "true"
+        elif v.isdigit():
+            v = int(v)
+        out[k] = v
+    return out, rules
+
+
+def main():
+    arch, shape, tag = sys.argv[1:4]
+    kv, rules = parse_flags(sys.argv[4:])
+    extra = {k: v for k, v in kv.items()
+             if k not in ("moe", "engram", "remat", "unroll", "zero1")}
+    outdir = Path(__file__).parent / "hillclimb"
+    outdir.mkdir(exist_ok=True)
+    stem = f"{arch}__{shape}__{tag}"
+    rec = lower_cell(arch, shape,
+                     moe=kv.get("moe", "gather"),
+                     engram_strategy=kv.get("engram"),
+                     remat=kv.get("remat", True),
+                     unroll=kv.get("unroll", False),
+                     zero1=kv.get("zero1", False),
+                     flags_extra=extra,
+                     rules_extra=rules or None,
+                     save_hlo=outdir / f"{stem}.hlo.gz")
+    rec["flags_extra"] = extra
+    (outdir / f"{stem}.json").write_text(json.dumps(rec, indent=1))
+    if not rec["ok"]:
+        print("FAIL:", rec["error"])
+        sys.exit(1)
+    from repro.roofline.analysis import roofline
+    s = rec["scaled"]
+    r = roofline(s["flops_dot"], s["bytes_accessed"],
+                 s["collectives"]["total_wire_bytes_per_device"])
+    print(f"{stem}: compute={r.compute_s*1e3:.2f}ms "
+          f"mem={r.memory_s*1e3:.2f}ms coll={r.collective_s*1e3:.2f}ms "
+          f"bound={r.bound} compile={rec['compile_s']}s")
+
+
+if __name__ == "__main__":
+    main()

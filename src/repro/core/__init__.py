@@ -1,0 +1,3 @@
+from .engram import (engram_defs, engram_fuse, engram_lookup, retrieve,
+                     retrieve_local, retrieve_pooled, retrieve_tp)
+from .hashing import engram_indices, decode_engram_indices

@@ -1,0 +1,83 @@
+"""Multi-head N-gram hashing for Engram conditional memory.
+
+Indices depend ONLY on token IDs (the paper's prefetch-enabling property):
+for each n-gram order and each of H hash heads, a murmur-style uint32
+mix maps the n-gram window to a row of that head's table.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import EngramConfig
+
+_M1 = np.uint32(0x7FEB352D)
+_M2 = np.uint32(0x846CA68B)
+
+
+def head_constants(ecfg: EngramConfig) -> np.ndarray:
+    """(n_tables, max_order) odd uint32 per (order, head, position)."""
+    rng = np.random.RandomState(ecfg.seed & 0x7FFFFFFF)
+    max_order = max(ecfg.orders)
+    c = rng.randint(1, 2**31, size=(ecfg.n_tables, max_order), dtype=np.int64)
+    return (c * 2 + 1).astype(np.uint32)                  # odd
+
+
+def _mix(x: jax.Array) -> jax.Array:
+    x = x ^ (x >> np.uint32(16))
+    x = x * _M1
+    x = x ^ (x >> np.uint32(15))
+    x = x * _M2
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def ngram_windows(tokens: jax.Array, order: int, pad_token: int) -> jax.Array:
+    """tokens (B,S) -> (B,S,order) windows [t_{i-order+1} ... t_i] (left-pad)."""
+    B, S = tokens.shape
+    cols = []
+    for j in range(order - 1, -1, -1):                    # oldest ... newest
+        if j == 0:
+            cols.append(tokens)
+        else:
+            shifted = jnp.pad(tokens[:, :-j], ((0, 0), (j, 0)),
+                              constant_values=pad_token)
+            cols.append(shifted)
+    return jnp.stack(cols, axis=-1)
+
+
+def engram_indices(ecfg: EngramConfig, tokens: jax.Array) -> jax.Array:
+    """tokens (B,S) int32 -> indices (B,S,n_tables) int32 in [0, table_vocab).
+
+    Table t = order_idx * n_heads + head. Identical token context => identical
+    indices (deterministic), the property the prefetch pipeline relies on.
+    """
+    consts = jnp.asarray(head_constants(ecfg))            # (T, max_order) u32
+    outs = []
+    for oi, order in enumerate(ecfg.orders):
+        win = ngram_windows(tokens, order, ecfg.pad_token).astype(jnp.uint32)
+        for h in range(ecfg.n_heads):
+            t = oi * ecfg.n_heads + h
+            seed_t = np.uint32((0x9E3779B9 * (t + 1)) & 0xFFFFFFFF)
+            acc = jnp.full(win.shape[:-1], seed_t, jnp.uint32)
+            for j in range(order):
+                acc = _mix(acc ^ (win[..., j] * consts[t, j]))
+            outs.append(acc % np.uint32(ecfg.table_vocab))
+    return jnp.stack(outs, axis=-1).astype(jnp.int32)
+
+
+def decode_engram_indices(ecfg: EngramConfig, last_tokens: jax.Array,
+                          new_token: jax.Array) -> jax.Array:
+    """Decode-step indices. last_tokens (B, max_order-1) most-recent history
+    (oldest first), new_token (B,). Returns (B, 1, n_tables)."""
+    ctx = jnp.concatenate([last_tokens, new_token[:, None]], axis=1)
+    idx = engram_indices(ecfg, ctx)                       # (B, max_order, T)
+    return idx[:, -1:, :]
+
+
+def update_last_tokens(last_tokens: jax.Array, new_token: jax.Array) -> jax.Array:
+    """Roll the (B, max_order-1) history window."""
+    if last_tokens.shape[1] == 0:
+        return last_tokens
+    return jnp.concatenate([last_tokens[:, 1:], new_token[:, None]], axis=1)

@@ -1,0 +1,2 @@
+from .pipeline import (DataConfig, TokenPipeline, frontend_features,
+                       make_batch, shard_batch)

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: high-concurrency Engram row gather.
+
+TPU-native adaptation of the paper's wide-grid CUDA ``cxl2vram_copy``
+(Listing 2): there, thousands of thread blocks each copy one embedding
+segment so the GPU scheduler saturates PCIe. Here, the *grid* is the
+concurrency axis — one grid step per row, with the row address injected via
+scalar-prefetched indices into the table BlockSpec's index_map. The Pallas
+pipeline double-buffers the HBM→VMEM DMAs, which is exactly the
+"overlap thousands of concurrent requests" behaviour of the CUDA kernel.
+
+The row block is (1, hd). hd is padded to the 128-lane boundary by the
+wrapper (ops.py) so VMEM tiles stay hardware-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, table_ref, out_ref):
+    # table_ref is the (1, hd) row selected by the scalar-prefetched index.
+    out_ref[...] = table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def gather_rows(table: jax.Array, idx: jax.Array, *,
+                interpret: bool = False, block_rows: int = 8) -> jax.Array:
+    """out[i] = table[idx[i]].  table (V, hd); idx (N,) int32; out (N, hd).
+
+    Grid = (N // block_rows, block_rows): the second grid dim is the
+    in-flight concurrency window the pipeline overlaps.
+    """
+    N = idx.shape[0]
+    hd = table.shape[1]
+    assert N % block_rows == 0, (N, block_rows)
+    grid = (N // block_rows, block_rows)
+
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, hd),
+                             lambda i, j, idx_ref: (idx_ref[i * block_rows + j], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, hd),
+                                   lambda i, j, idx_ref: (i * block_rows + j, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, hd), table.dtype),
+        interpret=interpret,
+    )(idx, table)

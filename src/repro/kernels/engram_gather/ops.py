@@ -1,0 +1,59 @@
+"""Jit'd public wrappers for the engram_gather kernel.
+
+Handles lane padding (hd -> multiple of 128), row-count padding, multi-table
+flattening, and CPU fallback (interpret mode runs the kernel body in Python
+for correctness; real deployments lower it for TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .engram_gather import gather_rows
+from .ref import engram_gather_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def engram_gather(tables: jax.Array, idx: jax.Array, *,
+                  interpret: bool | None = None,
+                  block_rows: int = 8) -> jax.Array:
+    """tables (T, V, hd); idx (..., T) int32 -> rows (..., T, hd).
+
+    Flattens the T sub-tables into one (T*V, hd) row space so a single
+    kernel launch covers every hash head (maximum in-flight concurrency,
+    mirroring the paper's single fused wide-grid launch).
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    T, V, hd = tables.shape
+    batch_shape = idx.shape[:-1]
+    n = 1
+    for s in batch_shape:
+        n *= s
+    flat = tables.reshape(T * V, hd)
+    # global row ids: table t row r -> t*V + r
+    gid = (idx + (jnp.arange(T, dtype=idx.dtype) * V)).reshape(-1)
+
+    hd_p = _pad_to(hd, 128)
+    if hd_p != hd:
+        flat = jnp.pad(flat, ((0, 0), (0, hd_p - hd)))
+    N = gid.shape[0]
+    N_p = _pad_to(max(N, block_rows), block_rows)
+    if N_p != N:
+        gid = jnp.pad(gid, (0, N_p - N))
+    rows = gather_rows(flat, gid.astype(jnp.int32), interpret=interp,
+                       block_rows=block_rows)
+    rows = rows[:N, :hd]
+    return rows.reshape(*batch_shape, T, hd)
+
+
+__all__ = ["engram_gather", "engram_gather_ref", "gather_rows"]

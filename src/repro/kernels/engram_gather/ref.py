@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the engram_gather kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """out[i] = table[idx[i]]."""
+    return jnp.take(table, idx, axis=0)
+
+
+def engram_gather_ref(tables: jax.Array, idx: jax.Array) -> jax.Array:
+    """tables (T, V, hd); idx (..., T) -> rows (..., T, hd)."""
+    T = tables.shape[0]
+    outs = [jnp.take(tables[t], idx[..., t], axis=0) for t in range(T)]
+    return jnp.stack(outs, axis=-2)

@@ -1,0 +1,46 @@
+"""Jit'd public wrapper for the gated_fuse kernel (padding + CPU fallback)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .gated_fuse import gated_fuse
+from .ref import gated_fuse_ref
+
+
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def engram_gated_fuse(h: jax.Array, e: jax.Array, wg: jax.Array,
+                      wp: jax.Array, *, interpret: bool | None = None):
+    """h (..., d); e (..., F) -> h + sigmoid(h@wg) * (e@wp).
+
+    Flattens leading dims, pads T to the row-tile boundary. d and F are
+    assumed lane-aligned by construction (model dims are multiples of 128
+    for every full config; the wrapper falls back to the oracle otherwise).
+    """
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    d = h.shape[-1]
+    F = e.shape[-1]
+    lead = h.shape[:-1]
+    if d % 128 or F % 128:
+        return gated_fuse_ref(h, e, wg, wp)
+    hf = h.reshape(-1, d)
+    ef = e.reshape(-1, F)
+    T = hf.shape[0]
+    bt = min(128, _pad_to(T, 8))
+    T_p = _pad_to(T, bt)
+    if T_p != T:
+        hf = jnp.pad(hf, ((0, T_p - T), (0, 0)))
+        ef = jnp.pad(ef, ((0, T_p - T), (0, 0)))
+    bd = 128 if d % 128 == 0 else d
+    out = gated_fuse(hf, ef, wg, wp, block_t=bt, block_d=bd,
+                     interpret=interp)
+    return out[:T].reshape(*lead, d)
+
+
+__all__ = ["engram_gated_fuse", "gated_fuse_ref", "gated_fuse"]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the gated_fuse kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def gated_fuse_ref(h, e, wg, wp):
+    """out = h + sigmoid(h @ wg) * (e @ wp), f32 accumulation."""
+    g = jax.nn.sigmoid(jnp.dot(h, wg, preferred_element_type=jnp.float32))
+    p = jnp.dot(e, wp, preferred_element_type=jnp.float32)
+    return (h.astype(jnp.float32) + g * p).astype(h.dtype)

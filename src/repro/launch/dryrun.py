@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective evidence.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+        --shape train_4k [--multi-pod] [--unroll] [--moe gather] [--out DIR]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The XLA_FLAGS line above MUST run before any other jax-importing module
+(jax locks the device count on first init) — hence its position."""
+
+import argparse
+import dataclasses
+import gzip
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, applicable_shapes, get_config
+from ..models.model import (abstract_params, build_decode_step,
+                            build_loss_fn, build_prefill_step,
+                            init_decode_state, params_logical_axes)
+from ..models.transformer import RunFlags
+from ..roofline.analysis import collective_stats, model_flops
+from ..roofline.hlo_scale import scaled_stats
+from ..sharding.rules import sharding_ctx
+
+RECORD_VERSION = 2
+from ..train.optimizer import (AdamWConfig, abstract_opt_state, adamw_update,
+                               opt_state_axes)
+from .mesh import make_production_mesh
+from .specs import (abstract_decode_state, batch_shardings, input_specs,
+                    param_shardings, state_shardings)
+
+
+def cell_rules(cfg, shape, mesh, optimized: bool = False) -> dict:
+    """Per-cell sharding-rule overrides."""
+    rules = {}
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    if shape.kind == "decode" and shape.global_batch < dp:
+        # batch can't fill the data axis: flash-decode (shard KV sequence)
+        rules["kv_seq"] = ("data",)
+    if optimized and shape.kind == "decode":
+        # §Perf-validated predicate: when kv heads can't fill the model
+        # axis (GQA kv<|model| or MLA latent cache), shard the KV cache
+        # over `model` via kv_seq — flash-decode partial softmax. Gains
+        # x8.9-x21.7 on the affected archs (EXPERIMENTS.md §Perf).
+        model = mesh.shape.get("model", 1)
+        kv_heads_fill = (cfg.attn_impl != "mla"
+                         and cfg.n_kv_heads % model == 0)
+        if not kv_heads_fill and "kv_seq" not in rules:
+            rules["kv_seq"] = ("model",)
+    return rules
+
+
+def build_step(cfg, shape, flags, zero1: bool = False):
+    """Returns (fn, make_abstract_args) for the cell.
+
+    ``zero1``: constrain gradients to the ZeRO-1 moment sharding before the
+    optimizer update — GSPMD then lowers the grad sync as
+    reduce-scatter(+param all-gather) instead of a full all-reduce
+    (§Perf iteration C3)."""
+    if shape.kind == "train":
+        loss_fn = build_loss_fn(cfg, flags)
+        oc = AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            if zero1:
+                from ..sharding.rules import current_ctx
+                ctx = current_ctx()
+                ax = opt_state_axes(params_logical_axes(cfg))["m"]
+                grads = jax.tree.map(
+                    lambda g, a: jax.lax.with_sharding_constraint(
+                        g, ctx.sharding_for(g.shape, tuple(a))),
+                    grads, ax,
+                    is_leaf=lambda x: isinstance(x, tuple) and all(
+                        e is None or isinstance(e, str) for e in x))
+            new_p, new_s, metrics = adamw_update(oc, params, grads, opt_state)
+            return new_p, new_s, loss, metrics
+
+        return train_step, "train"
+    if shape.kind == "prefill":
+        if cfg.is_encoder:
+            # encoder-only archs: prefill_32k == full bidirectional forward
+            from ..models.model import build_encoder_step
+            return build_encoder_step(cfg, flags), "prefill"
+        return build_prefill_step(cfg, flags, max_len=shape.seq_len), "prefill"
+    return build_decode_step(cfg, flags), "decode"
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               unroll: bool = False, moe: str = "gather",
+               engram_strategy: str | None = None, remat: bool = True,
+               rules_extra: dict | None = None, compile_only: bool = True,
+               hw_notes: bool = True, save_hlo: Path | None = None,
+               flags_extra: dict | None = None, zero1: bool = False,
+               optimized: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    fx = dict(flags_extra or {})
+    if optimized:
+        fx.setdefault("attn_bf16_scores", True)
+        if shape.kind == "train":
+            fx.setdefault("xent_remat", True)
+    flags = RunFlags(scan_layers=not unroll, remat=remat and shape.kind == "train",
+                     moe_strategy=moe, engram_strategy=engram_strategy,
+                     **fx)
+    rec = {
+        "version": RECORD_VERSION,
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "axes": list(mesh.axis_names), "n_devices": n_dev,
+        "unroll": unroll, "moe": moe,
+        "engram_strategy": engram_strategy or
+        (cfg.engram.strategy if cfg.engram else None),
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    rules = cell_rules(cfg, shape, mesh, optimized=optimized)
+    if rules_extra:
+        rules.update(rules_extra)
+    rec["optimized"] = optimized
+    rec["rules"] = {k: list(v) for k, v in rules.items()}
+    t0 = time.time()
+    try:
+        with sharding_ctx(mesh, rules) as ctx:
+            specs = input_specs(cfg, shape)
+            ab_params = abstract_params(cfg)
+            sh_params = param_shardings(cfg, ctx)
+            sh_batch = batch_shardings(specs, ctx)
+            step, kind = build_step(cfg, shape, flags, zero1=zero1)
+            if kind == "train":
+                ab_opt = abstract_opt_state(ab_params)
+                ax_opt = opt_state_axes(params_logical_axes(cfg))
+
+                def one(ax, a):
+                    return ctx.sharding_for(a.shape, tuple(ax))
+                sh_opt = jax.tree.map(
+                    one, ax_opt, ab_opt,
+                    is_leaf=lambda x: isinstance(x, tuple) and all(
+                        e is None or isinstance(e, str) for e in x))
+                args = (ab_params, ab_opt, specs)
+                in_sh = (sh_params, sh_opt, sh_batch)
+                out_sh = None
+            elif kind == "prefill":
+                args = (ab_params, specs)
+                in_sh = (sh_params, sh_batch)
+                out_sh = None
+            else:
+                ab_state = abstract_decode_state(cfg, flags,
+                                                 shape.global_batch,
+                                                 shape.seq_len)
+                sh_state = state_shardings(ab_state, ctx)
+                tok = specs["token"]
+                args = (ab_params, ab_state, tok)
+                in_sh = (sh_params, sh_state,
+                         ctx.sharding_for(tok.shape, ("batch",)))
+                out_sh = None
+            jitted = jax.jit(step, in_shardings=in_sh)
+            with mesh:
+                lowered = jitted.lower(*args)
+                rec["lower_s"] = round(time.time() - t0, 2)
+                t1 = time.time()
+                compiled = lowered.compile()
+                rec["compile_s"] = round(time.time() - t1, 2)
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                rec["memory"] = {
+                    "argument_bytes": int(ma.argument_size_in_bytes),
+                    "output_bytes": int(ma.output_size_in_bytes),
+                    "temp_bytes": int(ma.temp_size_in_bytes),
+                    "alias_bytes": int(ma.alias_size_in_bytes),
+                    "peak_bytes_est": int(ma.argument_size_in_bytes
+                                          + ma.output_size_in_bytes
+                                          + ma.temp_size_in_bytes
+                                          - ma.alias_size_in_bytes),
+                }
+            ca = compiled.cost_analysis() or {}
+            rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                           "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                           "transcendentals": float(ca.get("transcendentals", 0.0))}
+            txt = compiled.as_text()
+            rec["collectives"] = collective_stats(txt, n_dev)
+            rec["scaled"] = scaled_stats(txt, n_dev)   # trip-count-aware
+            rec["hlo_chars"] = len(txt)
+            rec["model_flops"] = model_flops(cfg, shape)
+            if save_hlo is not None:
+                save_hlo.parent.mkdir(parents=True, exist_ok=True)
+                with gzip.open(save_hlo, "wt") as f:
+                    f.write(txt)
+            rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure as data
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=10)
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--moe", default="gather",
+                    choices=["dense", "ragged", "gather", "alltoall"])
+    ap.add_argument("--engram", default=None,
+                    choices=[None, "local", "tp", "pooled"], nargs="?")
+    ap.add_argument("--optimized", action="store_true",
+                    help="§Perf-validated production config (bf16 scores, "
+                         "xent remat, kv_seq predicate)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from ..configs.base import list_archs
+    assigned = [a for a in list_archs() if not a.startswith("engram-")]
+    cells = []
+    if args.all:
+        for a in assigned:
+            for s in applicable_shapes(get_config(a)):
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for mp in meshes:
+        for arch, shp in cells:
+            tag = "pod2" if mp else "pod1"
+            rec = lower_cell(arch, shp, multi_pod=mp, unroll=args.unroll,
+                             moe=args.moe, engram_strategy=args.engram,
+                             remat=not args.no_remat,
+                             optimized=args.optimized,
+                             save_hlo=outdir / "hlo" /
+                             f"{tag}__{arch}__{shp}.hlo.gz")
+            f = outdir / f"{tag}__{arch}__{shp}.json"
+            f.write_text(json.dumps(rec, indent=1))
+            status = "OK " if rec["ok"] else "FAIL"
+            mem = rec.get("memory", {}).get("peak_bytes_est", 0) / 2**30
+            print(f"[{status}] {tag} {arch:22s} {shp:12s} "
+                  f"compile={rec.get('compile_s', 0):7.1f}s "
+                  f"peak/dev={mem:6.2f}GiB "
+                  f"coll={rec.get('collectives', {}).get('total_wire_bytes_per_device', 0)/2**20:9.1f}MiB"
+                  + ("" if rec["ok"] else f"  {rec['error'][:120]}"))
+            if not rec["ok"]:
+                failures += 1
+    print(f"\n{len(cells) * len(meshes) - failures}/{len(cells) * len(meshes)} cells passed")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Serving driver: batched requests through the continuous-batching engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \
+        --requests 16 --max-new 16 --pool CXL
+
+Compares pools with --compare (baseline / +Engram(DRAM) / +Engram(CXL)),
+the Table 2 experiment shape.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import numpy as np
+
+from ..configs.base import get_config
+from ..models.model import init_params
+from ..models.transformer import RunFlags
+from ..serving import Engine
+from .train import reduced_config
+
+
+def run_once(cfg, *, requests: int, max_new: int, pool, params=None,
+             max_batch: int = 8, max_len: int = 256, seed: int = 0,
+             warmup: bool = False, emulate_step_s=None):
+    # deployment default: the §Perf-validated decode path (bf16 scores —
+    # numerically equivalent per tests/test_perf_flags.py, ~7x less decode
+    # cache traffic). The dry-run baselines keep RunFlags() defaults.
+    flags = RunFlags(attn_bf16_scores=True)
+    eng = Engine(cfg, params=params, flags=flags, max_batch=max_batch,
+                 max_len=max_len, pool=pool, seed=seed,
+                 emulate_step_s=emulate_step_s)
+    if warmup:
+        eng.warmup()
+    rng = np.random.RandomState(seed)
+    for _ in range(requests):
+        plen = int(rng.randint(4, 24))
+        eng.submit(list(rng.randint(1, cfg.vocab_size, size=plen)),
+                   max_new=max_new)
+    stats = eng.run()
+    return eng, stats
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--pool", default=None,
+                    choices=[None, "DRAM", "CXL", "RDMA", "HBM"], nargs="?")
+    ap.add_argument("--compare", action="store_true",
+                    help="run baseline / +Engram(DRAM) / +Engram(CXL)")
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if not args.compare:
+        _, stats = run_once(cfg, requests=args.requests, max_new=args.max_new,
+                            pool=args.pool, max_batch=args.max_batch,
+                            max_len=args.max_len)
+        print(f"pool={args.pool or 'local'}: {stats.generated_tokens} tokens "
+              f"in {stats.wall_s:.2f}s = {stats.tokens_per_s:.1f} tok/s "
+              f"(stall {stats.stall_s * 1e3:.1f} ms)")
+        return 0
+
+    # Table 2 shape: baseline (no engram) vs +Engram(DRAM) vs +Engram(CXL)
+    base_cfg = dataclasses.replace(cfg, engram=None)
+    rows = []
+    for name, c, pool in [("baseline", base_cfg, None),
+                          ("+Engram (DRAM)", cfg, "DRAM"),
+                          ("+Engram (CXL)", cfg, "CXL")]:
+        _, stats = run_once(c, requests=args.requests, max_new=args.max_new,
+                            pool=pool, max_batch=args.max_batch,
+                            max_len=args.max_len)
+        rows.append((name, stats))
+        print(f"{name:18s} {stats.tokens_per_s:8.1f} tok/s "
+              f"(stall {stats.stall_s * 1e3:6.1f} ms, "
+              f"{stats.decode_steps} decode steps)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

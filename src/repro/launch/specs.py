@@ -1,0 +1,109 @@
+"""Abstract input specs + shardings for every (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation); ``*_shardings`` build the matching
+NamedSharding trees from the active ShardCtx.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.model import (abstract_params, init_decode_state,
+                            params_logical_axes)
+from ..models.transformer import RunFlags
+from ..sharding.rules import ShardCtx, current_ctx, params_shardings
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for one step of the given kind (no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), f32)
+        if cfg.frontend == "vision":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patch_tokens, cfg.frontend_dim), f32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "lengths": jax.ShapeDtypeStruct((B,), i32)}
+        if cfg.frontend == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.frontend_dim), f32)
+        if cfg.frontend == "vision":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patch_tokens, cfg.frontend_dim), f32)
+        return specs
+    if shape.kind == "decode":
+        # one new token against a KV cache of seq_len
+        return {"token": jax.ShapeDtypeStruct((B,), i32)}
+    raise ValueError(shape.kind)
+
+
+def abstract_decode_state(cfg: ModelConfig, flags: RunFlags, batch: int,
+                          max_len: int):
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, flags, batch, max_len))
+
+
+# logical axes for state leaves, keyed by leaf name (suffix dims)
+_STATE_AXES = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "c_kv": ("batch", "kv_seq", None),
+    "k_rope": ("batch", "kv_seq", None),
+    "conv": ("batch", None, "ffn"),
+    "ssm": ("batch", "ffn", None),
+    "C": ("batch", "heads", None, None),
+    "n": ("batch", "heads", None),
+    "m": ("batch", "heads"),
+    "c": ("batch", "heads", None),
+    "h": ("batch", "heads", None),
+    "positions": ("batch",),
+    "last_tokens": ("batch", None),
+}
+
+
+def state_shardings(state_abstract, ctx: ShardCtx):
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        key = None
+        for p in reversed(path):
+            k = getattr(p, "key", None)
+            if isinstance(k, str):
+                key = k
+                break
+        axes = _STATE_AXES.get(key, ())
+        base = len(axes)
+        full = (None,) * (leaf.ndim - base) + tuple(axes)[:leaf.ndim]
+        if leaf.ndim < base:
+            full = tuple(axes)[-leaf.ndim:] if leaf.ndim else ()
+        return ctx.sharding_for(leaf.shape, full)
+
+    return jax.tree_util.tree_map_with_path(one, state_abstract)
+
+
+def batch_shardings(specs: dict, ctx: ShardCtx):
+    out = {}
+    for k, v in specs.items():
+        axes = ("batch",) + (None,) * (v.ndim - 1)
+        out[k] = ctx.sharding_for(v.shape, axes)
+    return out
+
+
+def param_shardings(cfg: ModelConfig, ctx: ShardCtx, memory_kinds=None):
+    ab = abstract_params(cfg)
+    axes = params_logical_axes(cfg)
+
+    def one(ax, a):
+        return ctx.sharding_for(a.shape, ax)
+
+    return jax.tree.map(one, axes, ab,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            e is None or isinstance(e, str) for e in x))

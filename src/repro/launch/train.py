@@ -1,0 +1,108 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+        --reduced --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+Uses whatever devices exist (1 on this CPU container; a real pod picks up
+the full mesh via --mesh data,model=8,4). Restarts resume automatically
+from the newest complete checkpoint in --ckpt-dir.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import importlib
+import json
+import sys
+
+import jax
+
+from ..configs.base import get_config
+from ..data import DataConfig
+from ..models.transformer import RunFlags
+from ..sharding.rules import sharding_ctx
+from ..train.loop import TrainConfig, train_with_restarts, train
+from ..train.optimizer import AdamWConfig
+from .mesh import make_mesh
+
+
+def reduced_config(arch: str):
+    mod = importlib.import_module(
+        f"repro.configs.{arch.replace('-', '_').replace('.', '_')}")
+    return mod.reduced()
+
+
+def parse_mesh(spec: str | None):
+    if not spec:
+        n = len(jax.devices())
+        return make_mesh((n, 1), ("data", "model")) if n > 1 else None
+    axes, sizes = [], []
+    for part in spec.split(","):
+        name, size = part.split("=")
+        axes.append(name)
+        sizes.append(int(size))
+    return make_mesh(tuple(sizes), tuple(axes))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the arch's reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, help="e.g. data=4,model=2")
+    ap.add_argument("--engram", default=None,
+                    choices=[None, "local", "tp", "pooled", "pooled_host"],
+                    nargs="?")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    tc = TrainConfig(steps=args.steps, grad_accum=args.grad_accum,
+                     log_every=args.log_every, ckpt_every=args.ckpt_every,
+                     seed=args.seed)
+    dc = DataConfig(vocab_size=cfg.vocab_size, batch=args.batch,
+                    seq_len=args.seq, seed=args.seed)
+    flags = RunFlags(remat=not args.no_remat, engram_strategy=args.engram)
+    oc = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+                     decay_steps=args.steps)
+
+    mesh = parse_mesh(args.mesh)
+    with sharding_ctx(mesh):
+        ctxmgr = mesh if mesh is not None else _null()
+        with ctxmgr:
+            if args.ckpt_dir:
+                res = train_with_restarts(cfg, tc, dc, flags=flags, oc=oc,
+                                          ckpt_dir=args.ckpt_dir)
+            else:
+                res = train(cfg, tc, dc, flags=flags, oc=oc)
+
+    print(f"[train] done: {res.steps_run} steps, "
+          f"loss {res.losses[0]:.4f} -> {res.losses[-1]:.4f}, "
+          f"restarts={res.restarts}, stragglers={len(res.stragglers)}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump({"losses": res.losses, "restarts": res.restarts,
+                       "final_step": res.final_step}, f)
+    return 0
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    sys.exit(main())

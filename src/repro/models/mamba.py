@@ -1,0 +1,114 @@
+"""Mamba-1 selective SSM block (Jamba's mixer).
+
+Train/prefill: lax.scan over time with per-step discretization (the
+(B,S,d_inner,d_state) tensor is never materialized — the carry holds only
+(B, d_inner, d_state)). Decode: single-step state update on the cache
+{conv: (B, d_conv-1, di), ssm: (B, di, N)}.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.rules import shard
+from .params import pd
+
+
+def dt_rank(d_model: int) -> int:
+    return -(-d_model // 16)
+
+
+def mamba_defs(cfg: ModelConfig, dtype: str):
+    d, mc = cfg.d_model, cfg.mamba
+    di, N = mc.d_inner(d), mc.d_state
+    r = dt_rank(d)
+    return {
+        "in_proj": pd(d, 2 * di, axes=(None, "ffn"), dtype=dtype),
+        "conv_w": pd(mc.d_conv, di, axes=("conv", "ffn"), dtype=dtype),
+        "conv_b": pd(di, axes=("ffn",), dtype=dtype, init="zeros"),
+        "x_proj": pd(di, r + 2 * N, axes=("ffn", None), dtype=dtype),
+        "dt_proj": pd(r, di, axes=(None, "ffn"), dtype=dtype),
+        "dt_bias": pd(di, axes=("ffn",), dtype="float32", init="zeros"),
+        "A_log": pd(di, N, axes=("ffn", "state"), dtype="float32",
+                    init="zeros"),
+        "D": pd(di, axes=("ffn",), dtype="float32", init="ones"),
+        "out_proj": pd(di, d, axes=("ffn", None), dtype=dtype),
+    }
+
+
+def _conv_causal(params, x, conv_state):
+    """Depthwise causal conv over time. x (B,S,di); conv_state (B,K-1,di)."""
+    K = params["conv_w"].shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, k:k + x.shape[1]] * params["conv_w"][k][None, None]
+              for k in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else conv_state
+    return out + params["conv_b"][None, None], new_state
+
+
+def _ssm_step(params, h, x_t, dt_t, B_t, C_t, A):
+    """One selective-scan step. h (B,di,N); x_t/dt_t (B,di); B_t/C_t (B,N)."""
+    dA = jnp.exp(dt_t[..., None] * A[None])                 # (B,di,N)
+    dBx = (dt_t * x_t)[..., None] * B_t[:, None, :]         # (B,di,N)
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_t)
+    return h, y
+
+
+def mamba_forward(cfg: ModelConfig, params, x, cache=None):
+    """x (B,S,d) -> (out (B,S,d), new_cache). cache None => zeros (train)."""
+    mc = cfg.mamba
+    B, S, d = x.shape
+    di, N = mc.d_inner(d), mc.d_state
+    r = dt_rank(d)
+    xz = x @ params["in_proj"]
+    x_in, z = xz[..., :di], xz[..., di:]
+    x_in = shard(x_in, "batch", None, "ffn")
+    conv_state = (cache["conv"] if cache is not None else
+                  jnp.zeros((B, mc.d_conv - 1, di), x.dtype))
+    x_c, conv_state = _conv_causal(params, x_in, conv_state)
+    x_c = jax.nn.silu(x_c)
+    proj = x_c @ params["x_proj"]
+    dt_low, Bm, Cm = proj[..., :r], proj[..., r:r + N], proj[..., r + N:]
+    dt = jax.nn.softplus(dt_low @ params["dt_proj"]
+                         + params["dt_bias"][None, None].astype(x.dtype))
+    A = -jnp.exp(params["A_log"])                            # (di,N) f32
+
+    h0 = (cache["ssm"] if cache is not None else
+          jnp.zeros((B, di, N), jnp.float32))
+
+    def body(h, xs):
+        xt, dtt, bt, ct = xs
+        h, y = _ssm_step(params, h, xt.astype(jnp.float32),
+                         dtt.astype(jnp.float32), bt.astype(jnp.float32),
+                         ct.astype(jnp.float32), A)
+        return h, y
+
+    xs = (jnp.swapaxes(x_c, 0, 1), jnp.swapaxes(dt, 0, 1),
+          jnp.swapaxes(Bm, 0, 1), jnp.swapaxes(Cm, 0, 1))
+    h_f, ys = jax.lax.scan(body, h0, xs)
+    y = jnp.swapaxes(ys, 0, 1).astype(x.dtype)               # (B,S,di)
+    y = y + params["D"][None, None].astype(x.dtype) * x_c
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return shard(out, "batch", None, None), {"conv": conv_state, "ssm": h_f}
+
+
+def mamba_decode(cfg: ModelConfig, params, x, cache):
+    """Single-token decode. x (B,1,d)."""
+    out, new_cache = mamba_forward(cfg, params, x, cache)
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    mc = cfg.mamba
+    di = mc.d_inner(cfg.d_model)
+    return {
+        "conv": shard(jnp.zeros((batch, mc.d_conv - 1, di), dtype),
+                      "batch", None, "ffn"),
+        "ssm": shard(jnp.zeros((batch, di, mc.d_state), jnp.float32),
+                     "batch", "ffn", None),
+    }

@@ -1,0 +1,8 @@
+from .tiers import TIERS, TierSpec, DRAM, CXL, RDMA, HBM
+from .feasibility import (Feasibility, ServingPoint, check, check_all_tiers,
+                          paper_case_study, prefetch_window_s,
+                          required_bandwidth_Bps)
+from .simulator import (cached_read_latency_s, latency_sweep,
+                        read_latency_s, rdma_rescue_sweep,
+                        scalability_table, throughput_table)
+from .cost import CostRow, breakeven_nodes, cost_table, local_cost, pool_cost

@@ -1,0 +1,58 @@
+"""§5.4 capital-expenditure model (Tables 4/5).
+
+Local-DRAM provisioning: every node holds the full Engram table.
+CXL pool: one shared copy + switch + per-node adapters + controllers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+DEFAULT_PRICES = {
+    "dram_per_gb": 15.00,
+    "cxl_switch": 5800.00,
+    "cxl_adapter": 210.00,       # per host node
+    "cxl_controller": 300.00,    # per host node (paired in the pool)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CostRow:
+    engram_gb: float
+    nodes: int
+    local_usd: float
+    pool_usd: float
+
+    @property
+    def savings_usd(self) -> float:
+        return self.local_usd - self.pool_usd
+
+
+def local_cost(engram_gb: float, nodes: int, prices=DEFAULT_PRICES) -> float:
+    return prices["dram_per_gb"] * engram_gb * nodes
+
+
+def pool_cost(engram_gb: float, nodes: int, prices=DEFAULT_PRICES) -> float:
+    return (prices["cxl_switch"]
+            + nodes * (prices["cxl_adapter"] + prices["cxl_controller"])
+            + prices["dram_per_gb"] * engram_gb)
+
+
+def cost_table(engram_gbs=(200.0, 800.0), node_counts=(2, 4, 8, 16),
+               prices=DEFAULT_PRICES) -> list[CostRow]:
+    """Paper Table 5: 100B table = 200 GB, 400B table = 800 GB."""
+    rows = []
+    for gb in engram_gbs:
+        for n in node_counts:
+            rows.append(CostRow(gb, n, local_cost(gb, n, prices),
+                                pool_cost(gb, n, prices)))
+    return rows
+
+
+def breakeven_nodes(engram_gb: float, prices=DEFAULT_PRICES) -> float:
+    """Nodes beyond which the pool is cheaper."""
+    fixed = prices["cxl_switch"] + prices["dram_per_gb"] * engram_gb
+    per_node_pool = prices["cxl_adapter"] + prices["cxl_controller"]
+    per_node_local = prices["dram_per_gb"] * engram_gb
+    if per_node_local <= per_node_pool:
+        return float("inf")
+    return fixed / (per_node_local - per_node_pool)

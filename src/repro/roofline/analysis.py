@@ -1,0 +1,195 @@
+"""Three-term roofline from compiled SPMD artifacts.
+
+    compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory     = HLO_bytes / (chips x HBM_bw)
+    collective = collective_bytes / (chips x link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device program).
+Collectives are parsed from ``compiled.as_text()`` — the post-partitioning
+HLO (the pre-partitioning StableHLO contains none; verified). Ring-model
+wire-cost factors convert payloads to per-link bytes:
+
+    all-reduce      2·(n-1)/n · size
+    all-gather      (n-1)/n · size_out
+    reduce-scatter  (n-1)/n · size_in      (= out · n · (n-1)/n)
+    all-to-all      (n-1)/n · size
+    collective-permute  1 · size
+
+Hardware model: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link (about 100 GB/s/chip aggregate across links; we charge one
+link, the conservative bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+HW = {
+    "peak_flops": 197e12,       # bf16 per chip
+    "hbm_bw": 819e9,            # bytes/s per chip
+    "link_bw": 50e9,            # bytes/s per ICI link
+    "dcn_bw": 25e9,             # bytes/s per host cross-pod (pod axis)
+    "hbm_per_chip": 16 * 2**30,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3": 1, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<shapes>\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=(?:\[(\d+),(\d+)\]<=\[\d+\]|\{([^}]*)\})")
+
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    if m.group(2) is not None:
+        return int(m.group(2))
+    groups = m.group(3).split("},{") if m.group(3) else []
+    if groups:
+        first = groups[0].strip("{} ")
+        return len([t for t in first.split(",") if t.strip() != ""])
+    return default
+
+
+_RING_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / max(n, 1),
+    "all-gather": lambda n: (n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: float(n - 1),   # applied to OUT bytes (=in/n)
+    "all-to-all": lambda n: (n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> dict:
+    """Per-device collective payloads (wire bytes, ring model) by op kind."""
+    by_op = defaultdict(float)
+    raw_by_op = defaultdict(float)
+    counts = defaultdict(int)
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if f"{op}-done" in line:
+            continue
+        size = _shape_bytes(m.group("shapes"))
+        n = _group_size(line, n_devices)
+        wire = _RING_FACTOR[op](n) * size
+        by_op[op] += wire
+        raw_by_op[op] += size
+        counts[op] += 1
+    return {
+        "wire_bytes_per_device": dict(by_op),
+        "payload_bytes_per_device": dict(raw_by_op),
+        "counts": dict(counts),
+        "total_wire_bytes_per_device": float(sum(by_op.values())),
+    }
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        # optimistic perfect-overlap model: max of the three engines
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute fraction of the modeled step time."""
+        if self.step_time_s == 0:
+            return 0.0
+        return self.compute_s / self.step_time_s
+
+
+def roofline(flops_per_device: float, bytes_per_device: float,
+             coll_wire_bytes_per_device: float, hw: dict = HW) -> Roofline:
+    return Roofline(
+        compute_s=flops_per_device / hw["peak_flops"],
+        memory_s=bytes_per_device / hw["hbm_bw"],
+        collective_s=coll_wire_bytes_per_device / hw["link_bw"],
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        coll_bytes_per_device=coll_wire_bytes_per_device,
+    )
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (6·N·D dense / 6·N_active·D MoE; serve: 2·N·D + attn)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape) -> float:
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_active = cfg.active_param_count()
+    # exclude embedding table from the per-token matmul count
+    n_active_mm = n_active - cfg.vocab_size * cfg.d_model
+    if shape.kind == "train":
+        base = 6.0 * n_active_mm * tokens
+    else:
+        base = 2.0 * n_active_mm * tokens
+    # attention scores/values flops
+    attn = 0.0
+    ctx_len = shape.seq_len
+    for i in range(cfg.n_layers):
+        if cfg.layer_types[i] != "attn":
+            continue
+        if cfg.attn_impl == "mla":
+            hd_k = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+            hd_v = cfg.mla.v_head_dim
+            heads = cfg.n_heads
+        else:
+            hd_k = hd_v = cfg.head_dim
+            heads = cfg.n_heads
+        kind = cfg.attn_kinds[i]
+        if shape.kind == "decode":
+            span = ctx_len if kind != "local" or not cfg.window_size else min(
+                ctx_len, cfg.window_size)
+            per_tok = 2.0 * heads * span * (hd_k + hd_v)
+        else:
+            if kind == "local" and cfg.window_size:
+                span = min(cfg.window_size, ctx_len)
+                per_tok = 2.0 * heads * span * (hd_k + hd_v)
+            else:
+                per_tok = 2.0 * heads * (ctx_len / 2.0) * (hd_k + hd_v)
+        mult = 3.0 if shape.kind == "train" else 1.0
+        attn += per_tok * tokens * mult
+    return base + attn

@@ -1,0 +1,343 @@
+"""Trip-count-aware accounting over post-optimization SPMD HLO text.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a lax.scan
+over 60 layers reports 1/60th of the real FLOPs, and collectives inside
+the loop body are similarly under-counted (verified empirically on the CPU
+backend; see EXPERIMENTS.md §Method). This module re-derives the three
+roofline inputs from the HLO text with while-loop trip counts applied:
+
+  * flops        — dot ops: 2 * prod(result_dims) * prod(contracting dims),
+                   scaled by the product of enclosing loop trip counts
+                   (elementwise/transcendental flops are not counted — the
+                   workloads here are matmul-dominated, and the memory term
+                   bounds elementwise cost).
+  * bytes        — per-op operand+result bytes at fusion boundaries
+                   (post-opt fusions are the codegen units, so their
+                   boundaries are the actual HBM traffic), trip-scaled.
+  * collectives  — wire bytes by op kind (ring model), trip-scaled.
+
+Trip counts: scan lowers to while(condition: ind < K) with K a constant
+inside the condition computation; we take the largest s32 constant there
+(exact for scan; dynamic while loops fall back to 1 and are flagged).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3": 1, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<type>\([^)]*\)|\S+)\s+"
+    r"(?P<opcode>[\w\-]+)\((?P<rest>.*)$")
+
+# header: "%name (params...) -> type {" — params may hold nested tuple
+# parens, so match only the leading name
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-$]+)\s*\(")
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s+constant\((\d+)\)")
+_GROUPS_RE = re.compile(
+    r"replica_groups=(?:\[(\d+),(\d+)\]<=\[\d+\]|\{([^}]*)\})")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_RING_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / max(n, 1),
+    "all-gather": lambda n: (n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: float(n - 1),   # applied to OUT bytes
+    "all-to-all": lambda n: (n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+# no-traffic / structural ops
+_EXCLUDE_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "while", "conditional", "iota", "partition-id",
+    "replica-id", "rng-get-and-update-state", "opt-barrier",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims_of(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return tuple(int(d) for d in m.group(2).split(",") if d)
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str           # operand list + attributes (raw tail of the line)
+
+
+def parse_module(text: str):
+    """-> (computations: {name: [Op]}, shapes: {op_name: type_str})."""
+    comps: dict[str, list[Op]] = {}
+    shapes: dict[str, str] = {}
+    current: list[Op] | None = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if not s:
+            continue
+        if not s.startswith(" ") and s.endswith("{"):
+            m = _COMP_RE.match(s)
+            current = comps.setdefault(m.group("name"), []) if m else None
+            continue
+        if s == "}":
+            current = None
+            continue
+        m = _OP_RE.match(s)
+        if m and current is not None:
+            op = Op(m.group("name"), m.group("type"), m.group("opcode"),
+                    m.group("rest"))
+            current.append(op)
+            shapes[op.name] = op.type_str
+    return comps, shapes
+
+
+def _trip_count(cond_ops: list[Op]) -> int:
+    best = 0
+    for op in cond_ops:
+        if op.opcode == "constant":
+            m = re.match(r"s32\[\]", op.type_str)
+            if m:
+                c = re.search(r"constant\((\d+)\)",
+                              f"{op.opcode}({op.rest}")
+                if c:
+                    best = max(best, int(c.group(1)))
+    return best if best > 0 else 1
+
+
+def _multipliers(comps: dict) -> tuple[dict, dict]:
+    """-> ({computation: trip multiplier}, {while op name: trips}).
+
+    DFS from ENTRY (the computation not referenced by anyone, or named
+    'main'); fusion-called computations are excluded (handled separately).
+    """
+    referenced = set()
+    for ops in comps.values():
+        for op in ops:
+            for pat in (_CALLS_RE, _BODY_RE, _COND_RE):
+                for name in pat.findall(op.rest):
+                    referenced.add(name)
+            m = _BRANCHES_RE.search(op.rest)
+            if m:
+                for name in _OPERAND_RE.findall(m.group(1)):
+                    referenced.add(name)
+    roots = [n for n in comps if n not in referenced]
+    entry = None
+    for n in roots:
+        if "main" in n:
+            entry = n
+    if entry is None and roots:
+        entry = roots[0]
+    mult: dict[str, float] = {}
+    trips_by_while: dict[str, int] = {}
+    fusion_called: set[str] = set()
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m if False else max(
+            mult.get(name, 0.0), m)
+        for op in comps[name]:
+            if op.opcode == "while":
+                b = _BODY_RE.search(op.rest)
+                c = _COND_RE.search(op.rest)
+                trips = _trip_count(comps.get(c.group(1), [])) if c else 1
+                trips_by_while[op.name] = trips
+                if b:
+                    visit(b.group(1), m * trips)
+                if c:
+                    visit(c.group(1), m * max(trips, 1))
+            elif op.opcode == "conditional":
+                br = _BRANCHES_RE.search(op.rest)
+                if br:
+                    for bn in _OPERAND_RE.findall(br.group(1)):
+                        visit(bn, m)
+            elif op.opcode == "fusion":
+                cm = _CALLS_RE.search(op.rest)
+                if cm:
+                    fusion_called.add(cm.group(1))
+                    visit_fusion(cm.group(1), m)
+            else:
+                cm = _CALLS_RE.search(op.rest)
+                if cm:
+                    # to_apply / custom-call computations: tiny; skip walk
+                    fusion_called.add(cm.group(1))
+
+    def visit_fusion(name: str, m: float):
+        """Fusion internals: only dots count (flops), no byte traffic."""
+        if name not in comps:
+            return
+        mult.setdefault(f"__fusion__{name}", 0.0)
+        mult[f"__fusion__{name}"] = max(mult[f"__fusion__{name}"], m)
+        for op in comps[name]:
+            cm = _CALLS_RE.search(op.rest)
+            if cm and op.opcode == "fusion":
+                visit_fusion(cm.group(1), m)
+
+    if entry:
+        visit(entry, 1.0)
+    return mult, trips_by_while
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_RE.search(rest)
+    if not m:
+        return default
+    if m.group(2) is not None:
+        return int(m.group(2))
+    groups = m.group(3).split("},{") if m.group(3) else []
+    if groups:
+        first = groups[0].strip("{} ")
+        return len([t for t in first.split(",") if t.strip() != ""])
+    return default
+
+
+def _dot_flops(op: Op, shapes: dict) -> float:
+    out_dims = _dims_of(op.type_str) or ()
+    out = 1
+    for d in out_dims:
+        out *= d
+    operands = _OPERAND_RE.findall(op.rest.split(")", 1)[0])
+    k = 1
+    lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if lc and operands:
+        lhs_t = shapes.get(operands[0])
+        lhs_dims = _dims_of(lhs_t) if lhs_t else None
+        if lhs_dims:
+            for di in lc.group(1).split(","):
+                if di:
+                    k *= lhs_dims[int(di)]
+    return 2.0 * out * k
+
+
+def scaled_stats(text: str, n_devices: int) -> dict:
+    comps, shapes = parse_module(text)
+    mult, trips = _multipliers(comps)
+
+    # computations containing a dynamic-update-slice: fusions calling them
+    # update a buffer in place (XLA aliases input/output), so the aliased
+    # big-operand read + full-result write are NOT real traffic — only the
+    # update slice moves. Without this, a 32k-KV decode step would be
+    # charged the whole cache per layer per step.
+    dus_comps = {name for name, ops in comps.items()
+                 if any(op.opcode in ("dynamic-update-slice", "scatter")
+                        for op in ops)}
+    # computations that dynamic-slice a big operand: the real read is the
+    # slice, not the whole buffer (e.g. the backward pass reading one
+    # layer's residuals out of a (L, ...) stacked scan carry)
+    ds_bytes: dict[str, float] = {}
+    for name, ops in comps.items():
+        tot = 0.0
+        for op in ops:
+            if op.opcode in ("dynamic-slice", "gather"):
+                tot += _shape_bytes(op.type_str)
+        if tot:
+            ds_bytes[name] = tot
+
+    flops = 0.0
+    bytes_total = 0.0
+    coll_wire = defaultdict(float)
+    coll_payload = defaultdict(float)
+    coll_counts = defaultdict(float)
+
+    def account(name: str, ops: list[Op], m: float, fusion_internal: bool):
+        nonlocal flops, bytes_total
+        for op in ops:
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, shapes)
+            if fusion_internal:
+                continue
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES and not op.opcode.endswith("-done"):
+                size = _shape_bytes(op.type_str)
+                n = _group_size(op.rest, n_devices)
+                wire = _RING_FACTOR[base](n) * size
+                coll_wire[base] += m * wire
+                coll_payload[base] += m * size
+                coll_counts[base] += m
+            if op.opcode in _EXCLUDE_BYTES or op.opcode.endswith("-done"):
+                continue
+            res_b = _shape_bytes(op.type_str)
+            operand_b = []
+            for o in _OPERAND_RE.findall(op.rest.split(")", 1)[0]):
+                t = shapes.get(o)
+                if t:
+                    operand_b.append(_shape_bytes(t))
+            b = res_b + sum(operand_b)
+            is_dus = op.opcode in ("dynamic-update-slice", "scatter")
+            called = None
+            if op.opcode == "fusion":
+                cm = _CALLS_RE.search(op.rest)
+                called = cm.group(1) if cm else None
+                is_dus = called is not None and called in dus_comps
+            if is_dus and operand_b:
+                # in-place update: drop the aliased read+write
+                big = max(operand_b)
+                if abs(big - res_b) <= 0.05 * max(res_b, 1):
+                    b = sum(operand_b) - big
+            elif operand_b:
+                # slice-read: replace a big sliced operand by the slice
+                sliced = None
+                if op.opcode in ("dynamic-slice", "gather"):
+                    sliced = res_b
+                elif called is not None and called in ds_bytes:
+                    sliced = ds_bytes[called]
+                big = max(operand_b)
+                if sliced is not None and big > 2.0 * max(res_b, sliced):
+                    b = res_b + sum(operand_b) - big + sliced
+            bytes_total += m * b
+
+    for name, ops in comps.items():
+        if name in mult:
+            account(name, ops, mult[name], fusion_internal=False)
+        elif f"__fusion__{name}" in mult:
+            account(name, ops, mult[f"__fusion__{name}"],
+                    fusion_internal=True)
+
+    return {
+        "flops_dot": flops,
+        "bytes_accessed": bytes_total,
+        "collectives": {
+            "wire_bytes_per_device": dict(coll_wire),
+            "payload_bytes_per_device": dict(coll_payload),
+            "counts": dict(coll_counts),
+            "total_wire_bytes_per_device": float(sum(coll_wire.values())),
+        },
+        "while_trip_counts": sorted(trips.values(), reverse=True)[:16],
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,2 @@
+from .engine import Engine, EngineStats, Request
+from .slots import select_slots, update_slots

@@ -1,0 +1,250 @@
+"""Continuous-batching serving engine with Engram prefetch (mini-SGLang).
+
+Maps the paper's §4.3 integration onto a self-contained JAX engine:
+
+  * Initialization — the engine owns the model params; the Engram tables
+    are conceptually the shared pool (strategy `pooled`/`pooled_host` on a
+    mesh; `local` single-device).
+  * Prefetching — on each decode wave the engine *dispatches* the Engram
+    retrieval for the next tokens as its own jitted call before the decode
+    step is enqueued (JAX async dispatch = the paper's asynchronous launch;
+    XLA chains the dependency). Indices depend only on token IDs, so this
+    is issued the moment the previous wave's tokens are sampled.
+  * Computation — slot-based continuous batching: a fixed decode batch of
+    ``max_batch`` slots; finished slots are freed and refilled by new
+    prefills mid-flight (requests join/leave without draining the batch).
+
+Pool-tier emulation: on real hardware the Engram fetch either hides inside
+the prefetch window or stalls the step (paper §3.2). The engine reproduces
+that with the calibrated tier models — per wave it computes the retrieval
+latency for the active token count and sleeps max(0, latency - window).
+`pool=None` (weights local/HBM) injects nothing: that is the baseline and
+the '+Engram (DRAM-local)' configs of Table 2 differ only by engram compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.engram import retrieve
+from ..core.hashing import decode_engram_indices
+from ..models.model import (build_decode_step, build_prefill_step,
+                            init_decode_state, init_params)
+from ..models.transformer import RunFlags
+from ..pool.simulator import read_latency_s
+from ..pool.tiers import TIERS
+from .slots import update_slots
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    submitted_s: float = 0.0
+    first_token_s: float = 0.0
+    done_s: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    decode_steps: int = 0
+    prefills: int = 0
+    generated_tokens: int = 0
+    wall_s: float = 0.0
+    stall_s: float = 0.0
+    emu_time_s: float = 0.0          # accumulated emulated step + stall time
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def tokens_per_s_emulated(self) -> float:
+        """Throughput at the emulated operating point (paper-scale steps)."""
+        return (self.generated_tokens / self.emu_time_s
+                if self.emu_time_s else 0.0)
+
+
+def _bucket(n: int, bucket: int) -> int:
+    return max(bucket, -(-n // bucket) * bucket)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, *, params=None,
+                 flags: RunFlags = RunFlags(), max_batch: int = 8,
+                 max_len: int = 512, prompt_bucket: int = 32,
+                 pool: Optional[str] = None, seed: int = 0,
+                 step_latency_hint_s: Optional[float] = None,
+                 emulate_step_s: Optional[float] = None):
+        """``emulate_step_s``: evaluate the pool stalls at a production
+        operating point (ms-scale decode steps) instead of this host's
+        CPU step times — stalls are then accounted in ``emu_time_s``
+        rather than slept (Table 2/3 emulation)."""
+        assert not cfg.is_encoder, "serving needs a decoder"
+        self.cfg = cfg
+        self.flags = flags
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.prompt_bucket = prompt_bucket
+        self.pool = TIERS[pool] if pool else None
+        self.emulate_step_s = emulate_step_s
+        self.params = params if params is not None else init_params(cfg, seed)
+        self.has_engram = bool(cfg.engram_layers()) and "engram" in self.params
+
+        self._prefill = jax.jit(build_prefill_step(cfg, flags,
+                                                   max_len=max_len))
+        self._decode = jax.jit(build_decode_step(cfg, flags))
+        ext = build_decode_step(cfg, flags, external_rows=True) \
+            if self.has_engram else None
+        self._decode_ext = jax.jit(ext) if ext else None
+        self._prefetch = jax.jit(self._prefetch_fn) if self.has_engram else None
+        self._insert = jax.jit(update_slots, static_argnames=())
+
+        self.state = init_decode_state(cfg, flags, max_batch, max_len)
+        self.slots: list[Optional[Request]] = [None] * max_batch
+        self.tokens = jnp.zeros((max_batch,), jnp.int32)
+        self.queue: deque[Request] = deque()
+        self.done: dict[int, Request] = {}
+        self.stats = EngineStats()
+        self._rid = 0
+        self._step_times: list[float] = []
+        if step_latency_hint_s:
+            self._step_times.append(step_latency_hint_s)
+
+    # ------------------------------------------------------------ public API
+
+    def submit(self, prompt: list, max_new: int = 16) -> int:
+        self._rid += 1
+        req = Request(self._rid, list(prompt), max_new,
+                      submitted_s=time.perf_counter())
+        self.queue.append(req)
+        return self._rid
+
+    def run(self) -> EngineStats:
+        """Process until queue empty and all slots idle."""
+        t0 = time.perf_counter()
+        while self.queue or any(s is not None for s in self.slots):
+            self._admit()
+            self._decode_wave()
+        self.stats.wall_s += time.perf_counter() - t0
+        return self.stats
+
+    def warmup(self) -> None:
+        """Trigger the prefill/decode compiles outside measured runs."""
+        rid = self.submit([1, 2, 3], max_new=2)
+        self.run()
+        self.done.pop(rid, None)
+        self.reset_stats()
+
+    def reset_stats(self) -> None:
+        self.stats = EngineStats()
+
+    # ---------------------------------------------------------- prefill path
+
+    def _admit(self) -> None:
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.popleft()
+            S = _bucket(len(req.prompt), self.prompt_bucket)
+            toks = np.zeros((1, S), np.int32)
+            toks[0, :len(req.prompt)] = req.prompt
+            batch = {"tokens": jnp.asarray(toks),
+                     "lengths": jnp.asarray([len(req.prompt)], np.int32)}
+            if self.emulate_step_s is not None:
+                self.stats.emu_time_s += self.emulate_step_s
+            if self.pool is not None and self.has_engram:
+                self._inject_pool_stall(len(req.prompt), prefill=True)
+            logits, new_state = self._prefill(self.params, batch)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (1,)
+            self.state = self._insert(self.state, new_state,
+                                      jnp.asarray([slot], jnp.int32))
+            self.tokens = self.tokens.at[slot].set(tok[0])
+            req.out.append(int(tok[0]))
+            req.first_token_s = time.perf_counter()
+            self.slots[slot] = req
+            self.stats.prefills += 1
+            self.stats.generated_tokens += 1
+            self._finish_if_done(slot)
+
+    # ----------------------------------------------------------- decode path
+
+    def _prefetch_fn(self, params, last_tokens, token):
+        e = self.cfg.engram
+        idx = decode_engram_indices(e, last_tokens, token)
+        rows = []
+        for j, _ in enumerate(self.cfg.engram_layers()):
+            tab = params["engram"]["layers"][j]["tables"]
+            rows.append(retrieve(e, tab, idx, self.flags.engram_strategy))
+        return rows
+
+    def _decode_wave(self) -> None:
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
+        t0 = time.perf_counter()
+        if self.emulate_step_s is not None:
+            self.stats.emu_time_s += self.emulate_step_s
+        if self.pool is not None and self.has_engram:
+            self._inject_pool_stall(len(active), prefill=False)
+        if self._decode_ext is not None:
+            # the paper's prefetch: retrieval dispatched as its own call
+            rows = self._prefetch(self.params, self.state["last_tokens"],
+                                  self.tokens)
+            logits, self.state = self._decode_ext(self.params, self.state,
+                                                  self.tokens, rows)
+        else:
+            logits, self.state = self._decode(self.params, self.state,
+                                              self.tokens)
+        new_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.tokens = new_tok
+        self._step_times.append(time.perf_counter() - t0)
+        self.stats.decode_steps += 1
+        for i in active:
+            req = self.slots[i]
+            req.out.append(int(new_tok[i]))
+            self.stats.generated_tokens += 1
+            self._finish_if_done(i)
+
+    def _finish_if_done(self, slot: int) -> None:
+        req = self.slots[slot]
+        if req is not None and len(req.out) >= req.max_new:
+            req.done_s = time.perf_counter()
+            self.done[req.rid] = req
+            self.slots[slot] = None
+
+    # ------------------------------------------------------- pool emulation
+
+    def _step_estimate_s(self) -> float:
+        if self.emulate_step_s is not None:
+            return self.emulate_step_s
+        if not self._step_times:
+            return 1e-3
+        return float(np.median(self._step_times[-32:]))
+
+    def _inject_pool_stall(self, n_tokens: int, prefill: bool) -> None:
+        """Account (emulated point) or sleep (real point) the retrieval
+        overshoot beyond each Engram layer's prefetch window."""
+        e = self.cfg.engram
+        step = self._step_estimate_s()
+        t_exec = step / max(self.cfg.n_layers, 1)
+        stall = 0.0
+        for k in self.cfg.engram_layers():
+            window = k * t_exec            # k preceding layers (0-indexed)
+            lat = read_latency_s(e, self.pool, n_tokens)
+            stall += max(0.0, lat - window)
+        self.stats.stall_s += stall
+        if self.emulate_step_s is None:
+            if stall > 0:
+                time.sleep(stall)
+        else:
+            self.stats.emu_time_s += stall

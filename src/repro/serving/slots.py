@@ -1,0 +1,71 @@
+"""Slot-batched decode-state surgery for continuous batching.
+
+The decode state is a pytree whose leaves carry the batch dimension at
+different positions (stacked-layer leaves have leading (n_periods, ...)
+axes). ``update_slots`` scatter-writes k new-request states into k slots of
+the engine's live state, leaf by leaf, locating the batch axis the same way
+launch/specs.py does for shardings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# suffix logical axes per leaf name; batch position = ndim - len(axes) + idx
+_STATE_AXES = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "c_kv": ("batch", "kv_seq", None),
+    "k_rope": ("batch", "kv_seq", None),
+    "conv": ("batch", None, "ffn"),
+    "ssm": ("batch", "ffn", None),
+    "C": ("batch", "heads", None, None),
+    "n": ("batch", "heads", None),
+    "m": ("batch", "heads"),
+    "c": ("batch", "heads", None),
+    "h": ("batch", "heads", None),
+    "positions": ("batch",),
+    "last_tokens": ("batch", None),
+}
+
+
+def _leaf_key(path) -> str | None:
+    for p in reversed(path):
+        k = getattr(p, "key", None)
+        if isinstance(k, str):
+            return k
+    return None
+
+
+def batch_axis(path, leaf) -> int:
+    key = _leaf_key(path)
+    axes = _STATE_AXES.get(key)
+    if axes is None or "batch" not in axes:
+        raise ValueError(f"unknown state leaf {key!r} (path={path})")
+    return leaf.ndim - len(axes) + axes.index("batch")
+
+
+def update_slots(state, new_state, slots: jax.Array):
+    """Write new_state (batch k) into ``state`` (batch B) at ``slots`` (k,)."""
+
+    def one(path, leaf, new_leaf):
+        if leaf is None:
+            return None
+        ax = batch_axis(path, leaf)
+        moved = jnp.moveaxis(leaf, ax, 0)
+        newm = jnp.moveaxis(new_leaf, ax, 0)
+        return jnp.moveaxis(moved.at[slots].set(newm.astype(moved.dtype)), 0, ax)
+
+    return jax.tree_util.tree_map_with_path(one, state, new_state)
+
+
+def select_slots(state, slots: jax.Array):
+    """Read the sub-state of ``slots`` (gather along each leaf's batch axis)."""
+
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        ax = batch_axis(path, leaf)
+        return jnp.moveaxis(jnp.moveaxis(leaf, ax, 0)[slots], 0, ax)
+
+    return jax.tree_util.tree_map_with_path(one, state)

@@ -1,0 +1,4 @@
+from .optimizer import AdamWConfig, adamw_update, init_opt_state, abstract_opt_state, opt_state_axes, schedule
+from .loop import TrainConfig, TrainResult, SimulatedFailure, build_train_step, train, train_with_restarts
+from .compress import compressed_psum, compressed_psum_tree, compressed_pmean_tree, quantize, dequantize
+from .ddp import build_ddp_train_step

@@ -1,0 +1,198 @@
+"""Fault-tolerant sharded training loop.
+
+Production-shaped control plane on top of the step builders:
+
+  * grad accumulation (lax.scan over microbatches inside the jitted step),
+  * async checkpoint every ``ckpt_every`` + restart from latest complete,
+  * deterministic data (batch k is a pure function of (seed, k)) so a
+    restart replays the exact stream,
+  * failure injection (env ``REPRO_FAIL_AT_STEP``; raises after the step
+    commits but before its checkpoint unless it's a ckpt step) — the
+    restart test proves end-to-end recovery,
+  * straggler watchdog: per-step wall clock vs rolling median; slow steps
+    are recorded (on a real pod this feeds the controller's step-skip /
+    hot-spare swap; here it is observable behaviour under test).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import Checkpointer
+from ..configs.base import ModelConfig
+from ..data import DataConfig, TokenPipeline, frontend_features, shard_batch
+from ..models.model import (abstract_params, build_loss_fn, init_params,
+                            params_logical_axes)
+from ..models.transformer import RunFlags
+from ..sharding.rules import current_ctx, params_shardings
+from .optimizer import (AdamWConfig, abstract_opt_state, adamw_update,
+                        init_opt_state, opt_state_axes)
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure (REPRO_FAIL_AT_STEP)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    grad_accum: int = 1
+    log_every: int = 10
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    seed: int = 0
+    watchdog_factor: float = 3.0     # step > factor x median => straggler
+    async_ckpt: bool = True
+
+
+def build_train_step(cfg: ModelConfig, flags: RunFlags, oc: AdamWConfig,
+                     grad_accum: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With grad_accum > 1 the batch's leading dim is split into microbatches
+    and grads are accumulated by a lax.scan (memory-bounded)."""
+    loss_fn = build_loss_fn(cfg, flags)
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(b, i):
+                return jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // grad_accum),
+                        x.shape[0] // grad_accum, axis=0), b)
+
+            def body(carry, i):
+                acc, loss_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, micro(batch, i))
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(grad_accum))
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+        new_p, new_s, metrics = adamw_update(oc, params, grads, opt_state)
+        metrics["loss"] = loss
+        return new_p, new_s, metrics
+
+    return step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    steps_run: int
+    restarts: int
+    stragglers: list
+    final_step: int
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, dc: DataConfig,
+          *, flags: RunFlags = RunFlags(), oc: AdamWConfig = AdamWConfig(),
+          ckpt_dir: Optional[str] = None, restarts: int = 0,
+          log: Callable[[str], None] = print) -> TrainResult:
+    """Run (or resume) training. Deterministic given (cfg, tc, dc)."""
+    ctx = current_ctx()
+    ckpt = Checkpointer(ckpt_dir, keep_last=tc.keep_ckpts,
+                        async_write=tc.async_ckpt) if ckpt_dir else None
+
+    # ----- init or restore ------------------------------------------------
+    start_step = 0
+    params = opt_state = None
+    if ckpt is not None and ckpt.latest_step() is not None:
+        start_step = ckpt.latest_step()
+        ab = {"params": abstract_params(cfg),
+              "opt": abstract_opt_state(abstract_params(cfg))}
+        sh = None
+        if ctx is not None:
+            ax_p = params_logical_axes(cfg)
+            sh = {"params": params_shardings(ax_p, ab["params"]),
+                  "opt": jax.tree.map(
+                      lambda a, x: ctx.sharding_for(x.shape, tuple(a)),
+                      opt_state_axes(ax_p), ab["opt"],
+                      is_leaf=lambda x: isinstance(x, tuple) and all(
+                          e is None or isinstance(e, str) for e in x))}
+        tree = ckpt.restore(start_step, ab, sh)
+        params, opt_state = tree["params"], tree["opt"]
+        log(f"[train] restored step {start_step} from {ckpt_dir}")
+    if params is None:
+        params = init_params(cfg, tc.seed)
+        opt_state = init_opt_state(params)
+
+    step_fn = build_train_step(cfg, flags, oc, tc.grad_accum)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    pipe = TokenPipeline(dc)
+    fail_at = int(os.environ.get("REPRO_FAIL_AT_STEP", "-1"))
+
+    losses, stragglers, times = [], [], []
+    step = start_step
+    for step in range(start_step, tc.steps):
+        b = pipe.batch_at(step)
+        b.update(frontend_features(cfg, b["tokens"], dc.seed))
+        batch = shard_batch(b, ctx)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = jit_step(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        losses.append(loss)
+
+        # straggler watchdog
+        times.append(dt)
+        if len(times) >= 8:
+            med = float(np.median(times[-32:]))
+            if dt > tc.watchdog_factor * med:
+                stragglers.append((step, dt, med))
+                log(f"[watchdog] straggler at step {step}: "
+                    f"{dt * 1e3:.1f}ms vs median {med * 1e3:.1f}ms")
+
+        if ckpt is not None and (step + 1) % tc.ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt": opt_state},
+                      meta={"loss": loss})
+        if (step + 1) % tc.log_every == 0:
+            log(f"[train] step {step + 1}/{tc.steps} "
+                f"loss={loss:.4f} {dt * 1e3:.0f}ms/step")
+
+        if fail_at == step + 1:
+            # crash after the step, mid-interval (checkpoint may be stale)
+            raise SimulatedFailure(f"injected failure at step {step + 1}")
+
+    if ckpt is not None:
+        ckpt.save(tc.steps, {"params": params, "opt": opt_state},
+                  meta={"loss": losses[-1] if losses else float("nan")})
+        ckpt.wait()
+    return TrainResult(losses=losses, steps_run=tc.steps - start_step,
+                       restarts=restarts, stragglers=stragglers,
+                       final_step=tc.steps)
+
+
+def train_with_restarts(cfg: ModelConfig, tc: TrainConfig, dc: DataConfig,
+                        *, max_restarts: int = 3, ckpt_dir: str,
+                        **kw) -> TrainResult:
+    """Supervisor: restart after (injected or real) failures, resuming from
+    the latest complete checkpoint — the single-process analogue of a
+    cluster controller rescheduling a died pod."""
+    restarts = 0
+    while True:
+        try:
+            os_fail = os.environ.get("REPRO_FAIL_AT_STEP")
+            res = train(cfg, tc, dc, ckpt_dir=ckpt_dir, restarts=restarts,
+                        **kw)
+            return res
+        except SimulatedFailure:
+            restarts += 1
+            os.environ.pop("REPRO_FAIL_AT_STEP", None)  # fail once
+            if restarts > max_restarts:
+                raise

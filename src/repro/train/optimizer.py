@@ -1,0 +1,119 @@
+"""Sharded AdamW with ZeRO-1-style optimizer-state sharding.
+
+Moments are f32 regardless of param dtype. State shardings reuse the param
+logical axes, additionally mapping the first unsharded dimension onto the
+"opt" rule (the data axis) — XLA then materializes the classic ZeRO-1
+reduce-scatter(grads) / all-gather(params) pattern around the update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.rules import current_ctx
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(c: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(c.warmup_steps, 1))
+    t = jnp.clip((step - c.warmup_steps) / max(c.decay_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = c.min_lr_frac + (1 - c.min_lr_frac) * cos
+    return c.lr * warm * frac
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(lambda z: z.copy() if hasattr(z, "copy") else z,
+                              zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(params_abstract):
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                     params_abstract)
+    return {"m": z, "v": z, "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_state_axes(param_axes):
+    """Param logical axes -> moment axes with ZeRO 'opt' on the first
+    unsharded dim — but only when the param sharding doesn't already
+    consume the data axis (e.g. the pooled Engram table is sharded over
+    every axis; re-sharding its moments would force involuntary
+    rematerialization in the partitioner)."""
+    def one(axes):
+        axes = tuple(axes)
+        if any(a == "eng_vocab" for a in axes):
+            return axes                     # already data-axis sharded
+        out, done = [], False
+        for a in axes:
+            if a is None and not done:
+                out.append("opt")
+                done = True
+            else:
+                out.append(a)
+        return tuple(out)
+
+    mapped = jax.tree.map(
+        one, param_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x))
+    return {"m": mapped, "v": mapped, "step": ()}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(c: AdamWConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if c.grad_clip > 0 else jnp.float32(1.0)
+    lr = schedule(c, step)
+    b1, b2 = c.b1, c.b2
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + c.eps)
+        if c.weight_decay > 0 and p.ndim >= 2:
+            delta = delta + c.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,31 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 real device;
+multi-device checks run in subprocesses (tests/multidev_checks.py)."""
+import os
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+def reduced(arch: str):
+    import importlib
+    mod = importlib.import_module(
+        "repro.configs." + arch.replace("-", "_").replace(".", "_"))
+    return mod.reduced()
+
+
+ASSIGNED = [
+    "hubert-xlarge", "deepseek-v2-236b", "deepseek-v3-671b", "deepseek-7b",
+    "gemma2-27b", "gemma3-1b", "deepseek-coder-33b", "internvl2-1b",
+    "xlstm-125m", "jamba-1.5-large-398b",
+]

@@ -1,0 +1,235 @@
+"""Multi-device checks, run in a subprocess with 8 fake host devices
+(keeps the main pytest process at 1 device, per the harness contract).
+
+    python tests/multidev_checks.py <check_name>
+
+Exits 0 on success; prints the failure otherwise.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=8").strip()
+
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+sys.path.insert(0, str(SRC))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EngramConfig, MoEConfig, ModelConfig
+from repro.core.engram import engram_defs, retrieve
+from repro.core.hashing import engram_indices
+from repro.launch.mesh import make_mesh
+from repro.models.params import tree_init
+from repro.sharding.rules import sharding_ctx
+
+
+def check_engram_strategies():
+    """local == tp == pooled retrieval on a (2, 4) mesh."""
+    ecfg = EngramConfig(orders=(2, 3), n_heads=4, emb_dim=64,
+                        table_vocab=4096, layers=(1,), strategy="pooled")
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      vocab_size=101, n_heads=2, n_kv_heads=2, head_dim=16,
+                      d_ff=64, engram=ecfg, dtype="float32")
+    params = tree_init(engram_defs(cfg, "float32"), 0)
+    tab = params["layers"][0]["tables"]
+    toks = jnp.asarray(np.random.RandomState(0).randint(0, 101, (4, 8)))
+    idx = engram_indices(ecfg, toks)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    with sharding_ctx(mesh), mesh:
+        ref = np.asarray(jax.jit(
+            lambda t, i: retrieve(ecfg, t, i, "local"))(tab, idx))
+        for strat in ("tp", "pooled"):
+            out = np.asarray(jax.jit(
+                lambda t, i: retrieve(ecfg, t, i, strat))(tab, idx))
+            np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5,
+                                       err_msg=strat)
+    # batch=1 regression (long_500k path): batch not divisible by data axis
+    idx1 = engram_indices(ecfg, toks[:1])
+    with sharding_ctx(mesh), mesh:
+        ref1 = np.asarray(jax.jit(
+            lambda t, i: retrieve(ecfg, t, i, "local"))(tab, idx1))
+        out1 = np.asarray(jax.jit(
+            lambda t, i: retrieve(ecfg, t, i, "pooled"))(tab, idx1))
+    np.testing.assert_allclose(out1, ref1, rtol=1e-5, atol=1e-5)
+    # hot-row skew: every request hits the SAME n-gram (Zipf worst case).
+    # Pre-dedup this overflowed one owner's fixed capacity -> zero rows.
+    hot = jnp.full((4, 8), 42, jnp.int32)
+    idx_hot = engram_indices(ecfg, hot)
+    with sharding_ctx(mesh), mesh:
+        ref_h = np.asarray(jax.jit(
+            lambda t, i: retrieve(ecfg, t, i, "local"))(tab, idx_hot))
+        out_h = np.asarray(jax.jit(
+            lambda t, i: retrieve(ecfg, t, i, "pooled"))(tab, idx_hot))
+    np.testing.assert_allclose(out_h, ref_h, rtol=1e-5, atol=1e-5,
+                               err_msg="hot-row dedup")
+    assert np.abs(ref_h).sum() > 0                    # not trivially zero
+    print("engram strategies OK")
+
+
+def check_moe_ep():
+    """dense == gather == alltoall on an expert-parallel mesh."""
+    from repro.models.moe import moe_defs, moe_ffn
+    cfg = ModelConfig(
+        name="m", family="moe", n_layers=2, d_model=32, vocab_size=97,
+        n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+        moe=MoEConfig(n_experts=8, top_k=2, n_shared=1, d_ff_expert=48,
+                      capacity_factor=8.0),
+        ffn_types=("moe", "moe"), dtype="float32")
+    params = tree_init(moe_defs(cfg, "float32"), 0)
+    x = jnp.asarray(np.random.RandomState(0).randn(2, 8, 32).astype(np.float32) * 0.3)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    with sharding_ctx(mesh), mesh:
+        ref, _ = jax.jit(lambda p, v: moe_ffn(cfg, p, v, strategy="dense"))(
+            params, x)
+        for strat in ("gather", "alltoall"):
+            out, _ = jax.jit(
+                lambda p, v: moe_ffn(cfg, p, v, strategy=strat))(params, x)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-4, atol=2e-5, err_msg=strat)
+    print("moe EP OK")
+
+
+def check_compressed_ddp():
+    """Compressed-DDP step: params stay in sync with the exact-pmean step
+    within quantization tolerance, loss decreases."""
+    from repro.models.model import init_params
+    from repro.models.transformer import RunFlags
+    from repro.train import AdamWConfig, build_ddp_train_step
+    from repro.data import DataConfig, TokenPipeline
+
+    ecfg = EngramConfig(orders=(2,), n_heads=2, emb_dim=32, table_vocab=1024,
+                        layers=(1,), strategy="local")
+    cfg = ModelConfig(name="d", family="dense", n_layers=2, d_model=32,
+                      vocab_size=101, n_heads=2, n_kv_heads=2, head_dim=16,
+                      d_ff=64, engram=ecfg, dtype="float32")
+    mesh = make_mesh((8,), ("data",))
+    dc = DataConfig(vocab_size=101, batch=8, seq_len=16, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in TokenPipeline(dc).batch_at(0).items()}
+    params = init_params(cfg, 0)
+    from repro.train.optimizer import init_opt_state
+    opt = init_opt_state(params)
+    oc = AdamWConfig(lr=1e-3, warmup_steps=1, grad_clip=0.0)
+    with sharding_ctx(mesh), mesh:
+        step_c = jax.jit(build_ddp_train_step(cfg, RunFlags(), oc, mesh,
+                                              compress=True))
+        step_e = jax.jit(build_ddp_train_step(cfg, RunFlags(), oc, mesh,
+                                              compress=False))
+        pc, oc_s, mc = step_c(params, opt, batch)
+        pe, _, me = step_e(params, opt, batch)
+        np.testing.assert_allclose(float(mc["loss"]), float(me["loss"]),
+                                   rtol=1e-5)
+        # one-step params within quantization tolerance of exact DDP
+        for a, b in zip(jax.tree.leaves(pc), jax.tree.leaves(pe)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=0.2, atol=5e-3)
+        # int8 wire: the lowered HLO must carry s8 collectives
+        txt = step_c.lower(params, opt, batch).compile().as_text()
+        assert "s8[" in txt and ("all-to-all" in txt or "all-gather" in txt)
+        # multi-step training decreases loss
+        p, o = params, opt
+        losses = []
+        for s in range(8):
+            b = {k: jnp.asarray(v)
+                 for k, v in TokenPipeline(dc).batch_at(s).items()}
+            p, o, m = step_c(p, o, b)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], losses
+    print("compressed ddp OK")
+
+
+def check_tp_train_step():
+    """Sharded train step on (2,4) runs, loss finite, matches 1-dev loss."""
+    from repro.models.model import init_params
+    from repro.models.transformer import RunFlags
+    from repro.train import AdamWConfig, build_train_step
+    from repro.train.optimizer import init_opt_state
+    from repro.data import DataConfig, TokenPipeline
+
+    ecfg = EngramConfig(orders=(2, 3), n_heads=4, emb_dim=64,
+                        table_vocab=4096, layers=(1,), strategy="pooled")
+    cfg = ModelConfig(name="t", family="dense", n_layers=3, d_model=64,
+                      vocab_size=128, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, engram=ecfg, dtype="float32")
+    dc = DataConfig(vocab_size=128, batch=4, seq_len=16, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in TokenPipeline(dc).batch_at(0).items()}
+    oc = AdamWConfig(lr=1e-3, warmup_steps=1)
+    flags = RunFlags()
+
+    params = init_params(cfg, 0)
+    opt = init_opt_state(params)
+    loss_ref = None
+    step = build_train_step(cfg, flags, oc)
+    _, _, m = jax.jit(step)(params, opt, batch)
+    loss_ref = float(m["loss"])
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    with sharding_ctx(mesh), mesh:
+        _, _, m2 = jax.jit(step)(params, opt, batch)
+        loss_sh = float(m2["loss"])
+    np.testing.assert_allclose(loss_sh, loss_ref, rtol=1e-4)
+    print("tp train step OK")
+
+
+def check_elastic_checkpoint():
+    """Save on a (8,) mesh, restore onto a (2,4) mesh (re-layout)."""
+    import tempfile
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import Checkpointer
+
+    tree = {"w": jnp.arange(64.0).reshape(8, 8),
+            "b": jnp.ones((16,))}
+    with tempfile.TemporaryDirectory() as d:
+        mesh_a = make_mesh((8,), ("data",))
+        sh_a = {"w": NamedSharding(mesh_a, P("data", None)),
+                "b": NamedSharding(mesh_a, P("data"))}
+        placed = jax.tree.map(jax.device_put, tree, sh_a)
+        ck = Checkpointer(d, async_write=False)
+        ck.save(1, placed)
+        mesh_b = make_mesh((2, 4), ("x", "y"))
+        sh_b = {"w": NamedSharding(mesh_b, P("y", "x")),
+                "b": NamedSharding(mesh_b, P(("x", "y")))}
+        out = ck.restore(1, tree, sh_b)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+        assert out["w"].sharding == sh_b["w"]
+    print("elastic checkpoint OK")
+
+
+
+
+def check_embed_local_gather():
+    """Sharded-embed masked-local gather == plain take, and the lowered
+    HLO carries no full-table all-gather."""
+    from repro.models.layers import embed_defs, embed_lookup, embed_lookup_local
+    from repro.models.params import tree_init
+
+    params = tree_init(embed_defs(4096, 64, "float32"), 0)
+    toks = jnp.asarray(np.random.RandomState(0).randint(0, 4096, (4, 8)))
+    mesh = make_mesh((2, 4), ("data", "model"))
+    with sharding_ctx(mesh), mesh:
+        ref = np.asarray(jax.jit(lambda p, t: embed_lookup(p, t))(params, toks))
+        fn = jax.jit(lambda p, t: embed_lookup_local(p, t))
+        out = np.asarray(fn(params, toks))
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+        txt = fn.lower(params, toks).compile().as_text()
+        # the table is (4096, 64) f32 = 1 MiB; no collective that big
+        import re as _re
+        for m in _re.finditer(r"all-gather\(", txt):
+            line = txt[max(0, m.start()-200):m.start()]
+            assert "4096,64" not in line, "full-table all-gather present"
+    print("embed local gather OK")
+
+
+CHECKS = {f[len("check_"):]: v for f, v in list(globals().items())
+          if f.startswith("check_")}
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    CHECKS[name]()

@@ -1,0 +1,66 @@
+"""Per-arch reduced-config smoke: one forward/train step on CPU, asserting
+output shapes + no NaNs (the assignment's smoke requirement). Full configs
+are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import ASSIGNED, reduced
+
+from repro.data import DataConfig, TokenPipeline, frontend_features
+from repro.models.model import (build_encoder_step, build_loss_fn,
+                                init_params)
+from repro.models.transformer import RunFlags
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def _batch_for(cfg, B=2, S=16, seed=0):
+    dc = DataConfig(vocab_size=cfg.vocab_size, batch=B, seq_len=S, seed=seed)
+    b = TokenPipeline(dc).batch_at(0)
+    b.update(frontend_features(cfg, b["tokens"], seed))
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_and_train_step(arch):
+    cfg = reduced(arch)
+    flags = RunFlags(scan_layers=True)
+    params = init_params(cfg, 0)
+    batch = _batch_for(cfg)
+    loss_fn = build_loss_fn(cfg, flags)
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    assert np.isfinite(float(loss)), arch
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, arch
+    # one optimizer step moves the loss
+    opt = init_opt_state(params)
+    new_p, _, m = adamw_update(AdamWConfig(lr=1e-3, warmup_steps=1), params,
+                               grads, opt)
+    loss2 = float(loss_fn(new_p, batch))
+    assert np.isfinite(loss2), arch
+
+
+@pytest.mark.parametrize("arch", ["hubert-xlarge"])
+def test_encoder_step(arch):
+    cfg = reduced(arch)
+    assert cfg.is_encoder
+    params = init_params(cfg, 0)
+    batch = _batch_for(cfg)
+    step = build_encoder_step(cfg, RunFlags())
+    logits = step(params, batch)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_engram_applicability(arch):
+    """Engram is wired for every arch except the continuous-input encoder
+    (DESIGN.md §Arch-applicability)."""
+    cfg = reduced(arch)
+    full_has = cfg.engram is not None and bool(cfg.engram_layers())
+    if arch == "hubert-xlarge":
+        assert not full_has
+    else:
+        assert full_has, arch

@@ -1,0 +1,119 @@
+"""Config registry: every assigned arch present with the exact published
+dims; param counts near the nameplate; shape applicability rules."""
+import pytest
+
+from conftest import ASSIGNED
+
+from repro.configs.base import (SHAPES, applicable_shapes, get_config,
+                                list_archs, skipped_shapes)
+
+EXPECTED_DIMS = {
+    # arch: (layers, d_model, heads, kv_heads, d_ff, vocab)
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+    "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+    "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+    "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+    "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+    "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+    "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+}
+
+# nameplate total parameters (MoE = total incl. experts), |err| tolerance
+EXPECTED_PARAMS = {
+    "deepseek-v2-236b": (236e9, 0.15),
+    "deepseek-v3-671b": (671e9, 0.15),
+    "deepseek-7b": (7e9, 0.15),
+    "gemma2-27b": (27e9, 0.20),
+    "deepseek-coder-33b": (33e9, 0.15),
+    "jamba-1.5-large-398b": (398e9, 0.20),
+    "xlstm-125m": (125e6, 0.45),   # block structure approximated
+}
+
+
+def test_all_assigned_present():
+    archs = list_archs()
+    for a in ASSIGNED:
+        assert a in archs, a
+    assert "engram-27b" in archs and "engram-40b" in archs
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_exact_dims(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = EXPECTED_DIMS[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.vocab_size == v
+    if ff:
+        assert cfg.d_ff == ff or (cfg.moe and cfg.moe.d_ff_expert == ff)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_PARAMS))
+def test_param_count_near_nameplate(arch):
+    cfg = get_config(arch)
+    import dataclasses
+    base = dataclasses.replace(cfg, engram=None)   # nameplate excludes Engram
+    n = base.param_count()
+    target, tol = EXPECTED_PARAMS[arch]
+    assert abs(n - target) / target < tol, (arch, n, target)
+
+
+def test_moe_structure():
+    v2 = get_config("deepseek-v2-236b")
+    assert v2.moe.n_experts == 160 and v2.moe.top_k == 6 and v2.moe.n_shared == 2
+    v3 = get_config("deepseek-v3-671b")
+    assert v3.moe.n_experts == 256 and v3.moe.top_k == 8 and v3.moe.n_shared == 1
+    j = get_config("jamba-1.5-large-398b")
+    assert j.moe.n_experts == 16 and j.moe.top_k == 2
+
+
+def test_hybrid_interleave():
+    j = get_config("jamba-1.5-large-398b")
+    # 1:7 attention:mamba
+    attn = sum(1 for t in j.layer_types if t == "attn")
+    mamba = sum(1 for t in j.layer_types if t == "mamba")
+    assert attn * 7 == mamba
+    x = get_config("xlstm-125m")
+    assert set(x.layer_types) == {"slstm", "mlstm"}
+
+
+def test_gemma_local_global():
+    g2 = get_config("gemma2-27b")
+    kinds = g2.attn_kinds
+    assert kinds.count("local") == kinds.count("global")      # 1:1
+    g3 = get_config("gemma3-1b")
+    # 5:1 local:global repeating pattern (26 layers = 4 full periods + tail)
+    for i, k in enumerate(g3.attn_kinds):
+        assert k == ("global" if i % 6 == 5 else "local"), (i, k)
+
+
+def test_shape_applicability():
+    # encoder: no decode shapes
+    hub = get_config("hubert-xlarge")
+    assert applicable_shapes(hub) == ["train_4k", "prefill_32k"]
+    assert "decode_32k" in skipped_shapes(hub)
+    # full attention: no long_500k
+    d7 = get_config("deepseek-7b")
+    assert "long_500k" not in applicable_shapes(d7)
+    assert "long_500k" in skipped_shapes(d7)
+    # ssm/hybrid: long_500k runs
+    for a in ("xlstm-125m", "jamba-1.5-large-398b"):
+        assert "long_500k" in applicable_shapes(get_config(a))
+    # totals: 40 cells = 31 applicable + 9 documented skips
+    # (hubert: decode+long; 7 full-attention archs: long_500k)
+    n_app = sum(len(applicable_shapes(get_config(a))) for a in ASSIGNED)
+    n_skip = sum(len(skipped_shapes(get_config(a))) for a in ASSIGNED)
+    assert n_app + n_skip == 40
+    assert n_skip == 9
+
+
+def test_engram_presets_match_paper():
+    e27 = get_config("engram-27b").engram
+    assert e27.table_vocab == 2_262_400 and e27.emb_dim == 1280
+    e40 = get_config("engram-40b").engram
+    assert e40.table_vocab == 7_239_680 and e40.emb_dim == 1280

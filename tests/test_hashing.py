@@ -1,0 +1,91 @@
+"""Property tests for the Engram multi-head n-gram hashing (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import EngramConfig
+from repro.core.hashing import (decode_engram_indices, engram_indices,
+                                ngram_windows, update_last_tokens)
+
+ECFG = EngramConfig(orders=(2, 3), n_heads=4, emb_dim=64,
+                    table_vocab=4096, layers=(1,))
+
+
+tokens_strategy = st.lists(
+    st.integers(min_value=0, max_value=50_000), min_size=3, max_size=24)
+
+
+@settings(max_examples=25, deadline=None)
+@given(tokens_strategy)
+def test_indices_deterministic_and_in_range(toks):
+    t = jnp.asarray([toks], jnp.int32)
+    a = np.asarray(engram_indices(ECFG, t))
+    b = np.asarray(engram_indices(ECFG, t))
+    assert (a == b).all()
+    assert a.shape == (1, len(toks), ECFG.n_tables)
+    assert (a >= 0).all() and (a < ECFG.table_vocab).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(tokens_strategy, st.integers(min_value=1, max_value=8))
+def test_prefix_property(toks, extra):
+    """Indices at position i depend ONLY on tokens <= i — the property that
+    makes prefetch-at-step-start legal (paper §3.1)."""
+    t = jnp.asarray([toks], jnp.int32)
+    full = np.asarray(engram_indices(ECFG, t))
+    ext = jnp.asarray([toks + [7] * extra], jnp.int32)
+    ext_idx = np.asarray(engram_indices(ECFG, ext))
+    assert (ext_idx[:, :len(toks)] == full).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(tokens_strategy)
+def test_decode_indices_match_full_recompute(toks):
+    """The decode-path incremental indices == the full-sequence indices at
+    the last position (KV-cache-style correctness for Engram)."""
+    t = jnp.asarray([toks], jnp.int32)
+    full = np.asarray(engram_indices(ECFG, t))
+    max_order = max(ECFG.orders)
+    hist = toks[:-1]
+    pad = [ECFG.pad_token] * max(0, (max_order - 1) - len(hist))
+    last = jnp.asarray([pad + hist[-(max_order - 1):] if max_order > 1
+                        else []], jnp.int32)
+    inc = np.asarray(decode_engram_indices(
+        ECFG, last, jnp.asarray([toks[-1]], jnp.int32)))
+    assert (inc[0, 0] == full[0, -1]).all()
+
+
+def test_ngram_windows_left_pad():
+    t = jnp.asarray([[5, 6, 7, 8]], jnp.int32)
+    w = np.asarray(ngram_windows(t, 3, pad_token=0))
+    assert w.shape == (1, 4, 3)
+    assert list(w[0, 0]) == [0, 0, 5]
+    assert list(w[0, 1]) == [0, 5, 6]
+    assert list(w[0, 3]) == [6, 7, 8]
+
+
+def test_heads_decorrelated():
+    """Different hash heads should disagree on most inputs."""
+    t = jnp.asarray([np.arange(256)], jnp.int32)
+    idx = np.asarray(engram_indices(ECFG, t))[0]       # (S, T)
+    for a in range(ECFG.n_tables):
+        for b in range(a + 1, ECFG.n_tables):
+            agree = (idx[:, a] == idx[:, b]).mean()
+            assert agree < 0.05, (a, b, agree)
+
+
+def test_update_last_tokens_roll():
+    last = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    new = jnp.asarray([9, 8], jnp.int32)
+    out = np.asarray(update_last_tokens(last, new))
+    assert out.tolist() == [[2, 9], [4, 8]]
+
+
+def test_payload_matches_paper():
+    """Engram-27B: 8 hash heads x 320 B segments, 16 segments = 5 KB/token."""
+    from repro.configs.base import ENGRAM_27B
+    e = EngramConfig(**ENGRAM_27B)
+    assert e.head_dim * 2 == 320                   # bf16 segment bytes
+    assert e.n_tables == 16
+    assert e.bytes_per_token_layer == 5 * 1024

@@ -1,0 +1,22 @@
+"""Run the 8-fake-device checks in subprocesses (main process stays at 1
+device). Each check covers a shard_map/collective path the single-device
+tests can only fall back through."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SCRIPT = Path(__file__).parent / "multidev_checks.py"
+
+CHECKS = ["engram_strategies", "moe_ep", "compressed_ddp", "tp_train_step",
+          "elastic_checkpoint", "embed_local_gather"]
+
+
+@pytest.mark.parametrize("check", CHECKS)
+def test_multidev(check):
+    proc = subprocess.run([sys.executable, str(SCRIPT), check],
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"{check} failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}")
+    assert "OK" in proc.stdout

@@ -1,0 +1,77 @@
+"""The §Perf optimization flags must not change numerics (within dtype
+tolerance) — optimized and baseline paths are checked against each other."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced
+
+from repro.data import DataConfig, TokenPipeline
+from repro.models.model import (build_decode_step, build_loss_fn,
+                                build_prefill_step, init_params)
+from repro.models.transformer import RunFlags
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced("gemma2-27b")      # has local+global layers + softcap
+    params = init_params(cfg, 0)
+    dc = DataConfig(vocab_size=cfg.vocab_size, batch=2, seq_len=24, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in TokenPipeline(dc).batch_at(0).items()}
+    return cfg, params, batch
+
+
+def _decode_logits(cfg, params, batch, flags, steps=4):
+    prefill = build_prefill_step(cfg, flags, max_len=40)
+    decode = build_decode_step(cfg, flags)
+    logits, state = prefill(params, {"tokens": batch["tokens"]})
+    outs = [np.asarray(logits)]
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(steps):
+        logits, state = decode(params, state, tok)
+        outs.append(np.asarray(logits))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    return outs
+
+
+def test_bf16_scores_matches_baseline(setup):
+    cfg, params, batch = setup
+    base = _decode_logits(cfg, params, batch, RunFlags())
+    opt = _decode_logits(cfg, params, batch,
+                         RunFlags(attn_bf16_scores=True))
+    for b, o in zip(base, opt):
+        np.testing.assert_allclose(o, b, rtol=2e-3, atol=2e-3)
+
+
+def test_window_slice_matches_masked_decode(setup):
+    cfg, params, batch = setup
+    assert cfg.window_size > 0                  # gemma local layers
+    base = _decode_logits(cfg, params, batch, RunFlags())
+    opt = _decode_logits(cfg, params, batch,
+                         RunFlags(decode_window_slice=True))
+    for b, o in zip(base, opt):
+        np.testing.assert_allclose(o, b, rtol=2e-3, atol=2e-3)
+
+
+def test_xent_remat_exact(setup):
+    cfg, params, batch = setup
+    l0 = build_loss_fn(cfg, RunFlags())(params, batch)
+    l1 = build_loss_fn(cfg, RunFlags(xent_remat=True))(params, batch)
+    np.testing.assert_allclose(float(l1), float(l0), rtol=1e-6)
+    # gradients identical too (remat changes schedule, not math)
+    g0 = jax.grad(build_loss_fn(cfg, RunFlags()))(params, batch)
+    g1 = jax.grad(build_loss_fn(cfg, RunFlags(xent_remat=True)))(params, batch)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(b, np.float32),
+                                   np.asarray(a, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_embed_local_gather_falls_back_single_device(setup):
+    cfg, params, batch = setup
+    l0 = build_loss_fn(cfg, RunFlags())(params, batch)
+    l1 = build_loss_fn(cfg, RunFlags(embed_local_gather=True))(params, batch)
+    np.testing.assert_allclose(float(l1), float(l0), rtol=1e-6)

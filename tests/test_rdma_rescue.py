@@ -1,0 +1,28 @@
+"""Paper §6 Discussion, quantified: hot-row caching + payload aggregation."""
+from repro.configs.base import ENGRAM_27B, EngramConfig
+from repro.pool import paper_case_study, rdma_rescue_sweep
+from repro.pool.simulator import cached_read_latency_s
+from repro.pool.tiers import RDMA, TIERS
+
+E27 = EngramConfig(**ENGRAM_27B)
+
+
+def test_plain_rdma_never_fits():
+    rows = rdma_rescue_sweep(E27, paper_case_study())
+    assert not any(r["fits"] for r in rows)          # per-message cost wins
+
+
+def test_aggregated_rdma_fits_at_high_hit_rate():
+    rows = rdma_rescue_sweep(E27, paper_case_study())
+    by = {r["hit_rate"]: r for r in rows}
+    assert not by[0.0]["fits_agg"]                   # aggregation alone: no
+    assert by[0.99]["fits_agg"]                      # + hot cache: yes
+
+
+def test_cached_latency_monotone_in_hit_rate():
+    prev = None
+    for h in (0.0, 0.3, 0.6, 0.9, 0.99):
+        lat = cached_read_latency_s(E27, RDMA, 256, h)
+        if prev is not None:
+            assert lat <= prev + 1e-12
+        prev = lat

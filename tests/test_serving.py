@@ -1,0 +1,133 @@
+"""Serving engine: continuous batching correctness + pool-tier behaviour."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced
+
+from repro.models.model import (build_decode_step, build_prefill_step,
+                                init_decode_state, init_params)
+from repro.models.transformer import RunFlags
+from repro.serving import Engine
+from repro.serving.slots import select_slots, update_slots
+
+
+def tiny_cfg():
+    cfg = reduced("deepseek-7b")
+    return dataclasses.replace(cfg, n_layers=3, layer_types=("attn",) * 3,
+                               attn_kinds=("global",) * 3,
+                               ffn_types=("dense",) * 3,
+                               engram=dataclasses.replace(cfg.engram,
+                                                          layers=(1,)))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return tiny_cfg()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, 0)
+
+
+def test_all_requests_complete(cfg, params):
+    eng = Engine(cfg, params=params, max_batch=3, max_len=64,
+                 prompt_bucket=8)
+    rng = np.random.RandomState(0)
+    rids = [eng.submit(list(rng.randint(1, cfg.vocab_size, size=n)), max_new=5)
+            for n in (3, 7, 4, 9, 2)]
+    stats = eng.run()
+    assert set(eng.done) == set(rids)
+    assert all(len(eng.done[r].out) == 5 for r in rids)
+    assert stats.generated_tokens == 25
+    assert stats.prefills == 5
+
+
+def test_continuous_batching_interleaves(cfg, params):
+    """More requests than slots: later requests must join as slots free."""
+    eng = Engine(cfg, params=params, max_batch=2, max_len=64,
+                 prompt_bucket=8)
+    for i in range(5):
+        eng.submit([1 + i, 2 + i, 3 + i], max_new=3)
+    eng.run()
+    assert len(eng.done) == 5
+
+
+def test_engine_matches_raw_decode_loop(cfg, params):
+    """Engine output == hand-rolled prefill+decode for a single request."""
+    prompt = [5, 17, 42, 9]
+    eng = Engine(cfg, params=params, max_batch=1, max_len=32,
+                 prompt_bucket=8)
+    rid = eng.submit(prompt, max_new=4)
+    eng.run()
+    got = eng.done[rid].out
+
+    flags = RunFlags()
+    prefill = build_prefill_step(cfg, flags, max_len=32)
+    decode = build_decode_step(cfg, flags)
+    toks = np.zeros((1, 8), np.int32)
+    toks[0, :len(prompt)] = prompt
+    logits, state = prefill(params, {"tokens": jnp.asarray(toks),
+                                     "lengths": jnp.asarray([4], jnp.int32)})
+    ref = [int(jnp.argmax(logits[0]))]
+    for _ in range(3):
+        logits, state = decode(params, state,
+                               jnp.asarray([ref[-1]], jnp.int32))
+        ref.append(int(jnp.argmax(logits[0])))
+    assert got == ref
+
+
+def test_prefetch_path_equals_inline_path(cfg, params):
+    """external_rows decode (prefetch) must equal the inline-retrieval
+    decode bit-for-bit."""
+    flags = RunFlags()
+    eng_pref = Engine(cfg, params=params, max_batch=1, max_len=32,
+                      prompt_bucket=8)
+    assert eng_pref._decode_ext is not None      # prefetch path active
+    rid = eng_pref.submit([7, 8, 9], max_new=6)
+    eng_pref.run()
+    out = eng_pref.done[rid].out
+
+    # monkeypatch: force the inline path
+    eng_inline = Engine(cfg, params=params, max_batch=1, max_len=32,
+                        prompt_bucket=8)
+    eng_inline._decode_ext = None
+    rid2 = eng_inline.submit([7, 8, 9], max_new=6)
+    eng_inline.run()
+    assert out == eng_inline.done[rid2].out
+
+
+def test_pool_tiers_rank_by_throughput(cfg, params):
+    """At a production operating point (50 us steps -> ~17 us window for
+    this 3-layer model) RDMA overshoots the prefetch window while DRAM/CXL
+    hide — the paper's Table 2 ordering."""
+    outs = {}
+    for pool in ("DRAM", "CXL", "RDMA"):
+        eng = Engine(cfg, params=params, max_batch=2, max_len=32,
+                     prompt_bucket=8, pool=pool, emulate_step_s=5e-5)
+        for i in range(3):
+            eng.submit([1, 2, 3 + i], max_new=4)
+        stats = eng.run()
+        outs[pool] = stats
+    assert outs["DRAM"].stall_s == 0.0          # hides in window
+    assert outs["CXL"].stall_s == 0.0           # the paper's thesis
+    assert outs["RDMA"].stall_s > 0.0           # overshoots
+    assert (outs["CXL"].tokens_per_s_emulated
+            > outs["RDMA"].tokens_per_s_emulated)
+    # near-DRAM end-to-end performance
+    assert (outs["CXL"].tokens_per_s_emulated
+            > 0.95 * outs["DRAM"].tokens_per_s_emulated)
+
+
+def test_update_select_slots_roundtrip(cfg):
+    flags = RunFlags()
+    state_b = init_decode_state(cfg, flags, 4, 16)
+    state_n = init_decode_state(cfg, flags, 2, 16)
+    state_n["positions"] = state_n["positions"] + 5
+    out = update_slots(state_b, state_n, jnp.asarray([1, 3], jnp.int32))
+    sel = select_slots(out, jnp.asarray([1, 3], jnp.int32))
+    assert np.asarray(sel["positions"]).tolist() == [5, 5]
+    assert np.asarray(out["positions"]).tolist() == [0, 5, 0, 5]

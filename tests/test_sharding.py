@@ -1,0 +1,82 @@
+"""Sharding rules: logical-axis resolution + divisibility fallback."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_mesh
+from repro.sharding.rules import (DEFAULT_RULES, ShardCtx, sharding_ctx,
+                                  current_ctx)
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    return ShardCtx(mesh, dict(DEFAULT_RULES))
+
+
+def mk_ctx(shape, axes, rules=None):
+    mesh = make_mesh(shape, axes)
+    merged = dict(DEFAULT_RULES)
+    merged.update(rules or {})
+    return ShardCtx(mesh, merged)
+
+
+def test_resolve_drops_missing_axes():
+    c = mk_ctx((1,), ("model",))
+    assert c.resolve("batch") == ()          # pod/data not in mesh
+    assert c.resolve("heads") == ("model",)
+
+
+def test_divisibility_fallback():
+    c = mk_ctx((1, 1), ("data", "model"))
+    # dim 7 not divisible by model=1? 1 divides everything
+    assert c.spec_for((8, 16), (None, "heads")) == P(None, "model")
+
+
+def test_divisibility_fallback_drops():
+    # heads=4 over model=16: must replicate, not crash (gemma3-1b case)
+    mesh_axes = {"data": 2, "model": 16}
+    c = ShardCtx(jax.sharding.Mesh(
+        np.array(jax.devices() * 32).reshape(2, 16), ("data", "model")),
+        dict(DEFAULT_RULES))
+    spec = c.spec_for((10, 4), (None, "heads"))
+    assert spec == P()                        # 4 % 16 != 0 -> replicated
+    spec2 = c.spec_for((10, 32), (None, "heads"))
+    assert spec2 == P(None, "model")
+
+
+def test_multi_axis_partial_drop():
+    """eng_vocab = (pod, data, model): keeps the divisible prefix."""
+    c = ShardCtx(jax.sharding.Mesh(
+        np.array(jax.devices() * 8).reshape(2, 4), ("data", "model")),
+        dict(DEFAULT_RULES))
+    # 8 % (2*4) == 0 -> both axes
+    assert c.spec_for((8, 5), ("eng_vocab", None)) == P(("data", "model"))
+    # 6 % 8 != 0; 6 % 2 == 0 -> data only
+    assert c.spec_for((6, 5), ("eng_vocab", None)) == P("data")
+
+
+def test_no_axis_reuse_across_dims():
+    c = ShardCtx(jax.sharding.Mesh(
+        np.array(jax.devices() * 4).reshape(4,), ("model",)),
+        {"a": ("model",), "b": ("model",)})
+    spec = c.spec_for((4, 4), ("a", "b"))
+    assert spec == P("model")                 # second dim can't reuse model
+
+
+def test_ctx_stack():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    assert current_ctx() is None
+    with sharding_ctx(mesh):
+        assert current_ctx() is not None
+        with sharding_ctx(None):
+            assert current_ctx() is None
+        assert current_ctx() is not None
+    assert current_ctx() is None
+
+
+def test_rules_override():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with sharding_ctx(mesh, {"kv_seq": ("data",)}) as c:
+        assert c.resolve("kv_seq") == ("data",)
