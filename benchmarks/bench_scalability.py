@@ -29,16 +29,18 @@ def run(fast: bool = False) -> None:
     if not fast:
         # measured DP emulation: two engine replicas sharing the pool model
         cfg = reduced_config("deepseek-7b")
-        _, s1 = run_once(cfg, requests=6, max_new=6, pool="CXL",
-                         max_batch=4, max_len=64)
+        e1, s1 = run_once(cfg, requests=6, max_new=6, pool="CXL",
+                          max_batch=4, max_len=64)
         _, s2a = run_once(cfg, requests=3, max_new=6, pool="CXL",
                           max_batch=4, max_len=64, seed=1)
         _, s2b = run_once(cfg, requests=3, max_new=6, pool="CXL",
                           max_batch=4, max_len=64, seed=2)
         agg = s2a.generated_tokens + s2b.generated_tokens
         wall = max(s2a.wall_s, s2b.wall_s)
+        st = e1.store.stats()
         emit("scalability/measured_dp1", 1e6 / max(s1.tokens_per_s, 1e-9),
-             f"{s1.tokens_per_s:.1f}tok/s")
+             f"{s1.tokens_per_s:.1f}tok/s store[{st.tier}] "
+             f"hidden {st.hidden_waves}/{st.waves} waves")
         emit("scalability/measured_dp2_serial", 1e6 / max(agg / (s2a.wall_s + s2b.wall_s), 1e-9),
              f"{agg/(s2a.wall_s+s2b.wall_s):.1f}tok/s (1-core serial bound)")
 

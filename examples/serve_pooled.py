@@ -1,7 +1,13 @@
 """Serve an Engram model with batched requests from a simulated CXL pool,
 reproducing the Table 2 comparison (baseline / +Engram DRAM / +Engram CXL).
 
+All pool behaviour — tier latency, the optional LRU hot-row cache, and
+prefetch-window stalls — comes from the tiered EngramStore subsystem
+(src/repro/pool/store.py); the engine just charges what the store reports.
+
     PYTHONPATH=src python examples/serve_pooled.py [--requests 8]
+    # paper §6 rescue, end-to-end: RDMA backing tier + DRAM hot-row cache
+    PYTHONPATH=src python examples/serve_pooled.py --pool RDMA --cache-rows 100000
 """
 import argparse
 import sys
@@ -16,11 +22,23 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--pool", default=None,
+                    choices=["DRAM", "CXL", "RDMA", "RDMA-agg", "HBM"])
+    ap.add_argument("--cache-rows", type=int, default=0,
+                    help="LRU hot-row cache rows in front of --pool")
     args = ap.parse_args()
-    return serve_main(["--arch", "deepseek-7b", "--reduced", "--compare",
-                       "--requests", str(args.requests),
-                       "--max-new", str(args.max_new),
-                       "--max-batch", "4", "--max-len", "64"])
+    argv = ["--arch", "deepseek-7b", "--reduced",
+            "--requests", str(args.requests),
+            "--max-new", str(args.max_new),
+            "--max-batch", "4", "--max-len", "64"]
+    if args.pool:
+        argv += ["--pool", args.pool, "--cache-rows", str(args.cache_rows)]
+    else:
+        if args.cache_rows:
+            ap.error("--cache-rows needs --pool (the cache fronts a "
+                     "backing tier; compare mode runs fixed variants)")
+        argv += ["--compare"]
+    return serve_main(argv)
 
 
 if __name__ == "__main__":

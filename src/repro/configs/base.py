@@ -21,6 +21,23 @@ from typing import Callable, Optional
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
+class StoreConfig:
+    """Tiered-store knobs (pool/store.py): the cache/prefetch front-end the
+    paper's §6 discussion proposes in front of a slow backing tier.
+
+    ``cache_rows=0`` disables the hot-row cache. ``prefetch_depth`` is the
+    scheduler pipeline depth: 0 = synchronous fetch at the Engram layer
+    (window 0), 1 = the paper's prefetch (issue at step start, window =
+    k·t_exec), >=2 adds (depth-1) full decode steps of lookahead credit
+    (legal only when future tokens are already known, e.g. speculative or
+    multi-token heads — an emulation knob, off by default).
+    """
+    cache_rows: int = 0                    # LRU hot-row cache capacity (rows)
+    cache_tier: str = "DRAM"               # tier serving cache hits
+    prefetch_depth: int = 1                # scheduler pipeline depth
+
+
+@dataclass(frozen=True)
 class EngramConfig:
     """Engram conditional memory (DeepSeek) + pooling strategy (this paper).
 
@@ -38,6 +55,7 @@ class EngramConfig:
     strategy: str = "pooled"
     seed: int = 0x5EED
     pad_token: int = 0                     # BOS padding for left edge
+    store: StoreConfig = field(default_factory=StoreConfig)
 
     @property
     def head_dim(self) -> int:

@@ -23,6 +23,7 @@ start (the paper's prefetch: indices depend only on token IDs).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 
 import jax
@@ -31,7 +32,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import EngramConfig, ModelConfig
-from ..sharding.rules import current_ctx, mesh_axes, shard
+from ..sharding.rules import compat_shard_map, current_ctx, mesh_axes, shard
 from ..models.params import pd
 from ..models.layers import rmsnorm
 from .hashing import engram_indices
@@ -119,10 +120,10 @@ def retrieve_tp(ecfg: EngramConfig, tables, idx):
     # divisibility-aware batch spec (long_500k has B=1 < |data|)
     spec_i = ctx.spec_for(idx.shape, ("batch", None, None))
     b_entry = spec_i[0] if len(spec_i) > 0 else None
-    fn = jax.shard_map(local_fn, mesh=ctx.mesh,
-                       in_specs=(P(None, ax, None), spec_i),
-                       out_specs=P(b_entry, None, ax),
-                       check_vma=False)
+    fn = compat_shard_map(local_fn, mesh=ctx.mesh,
+                          in_specs=(P(None, ax, None), spec_i),
+                          out_specs=P(b_entry, None, ax),
+                          check_vma=False)
     return fn(tables, idx)
 
 
@@ -213,10 +214,10 @@ def retrieve_pooled(ecfg: EngramConfig, tables, idx, *, slack: float = 2.0):
 
     # divisibility-aware batch spec (long_500k has B=1 < |data|)
     spec_i = ctx.spec_for(idx.shape, ("batch", None, None))
-    fn = jax.shard_map(local_fn, mesh=ctx.mesh,
-                       in_specs=(P(None, pool_axes, None), spec_i),
-                       out_specs=spec_i,
-                       check_vma=False)
+    fn = compat_shard_map(local_fn, mesh=ctx.mesh,
+                          in_specs=(P(None, pool_axes, None), spec_i),
+                          out_specs=spec_i,
+                          check_vma=False)
     return fn(tables, idx)
 
 
@@ -246,18 +247,44 @@ def retrieve_host(ecfg: EngramConfig, tables, idx):
     return rows.reshape(B, S, T * hd)
 
 
+# ---------------------------------------------------------------------------
+# strategy registry — placement only; cost semantics live in pool/store.py
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StrategySpec:
+    """A retrieval strategy: *where* the rows live and which collectives
+    move them. What that placement costs (tier latency, hot-row cache,
+    prefetch windows) is the store's concern — ``spec.store(ecfg)``
+    resolves the matching ``EngramStore`` backend via
+    ``pool.store.STRATEGY_TIERS``."""
+    name: str
+    fn: object                        # (ecfg, tables, idx) -> rows
+
+    def store(self, ecfg: EngramConfig):
+        from ..pool.store import store_for_strategy
+        return store_for_strategy(ecfg, self.name)
+
+
 STRATEGIES = {
-    "local": retrieve_local,
-    "local_kernel": retrieve_local_kernel,
-    "tp": retrieve_tp,
-    "pooled": retrieve_pooled,
-    "pooled_host": retrieve_host,
+    s.name: s for s in (
+        StrategySpec("local", retrieve_local),
+        StrategySpec("local_kernel", retrieve_local_kernel),
+        StrategySpec("tp", retrieve_tp),
+        StrategySpec("pooled", retrieve_pooled),
+        StrategySpec("pooled_host", retrieve_host),
+    )
 }
 
 
 def retrieve(ecfg: EngramConfig, tables, idx, strategy: str = None):
     s = strategy or ecfg.strategy
-    return STRATEGIES[s](ecfg, tables, idx)
+    return STRATEGIES[s].fn(ecfg, tables, idx)
+
+
+def strategy_store(ecfg: EngramConfig, strategy: str = None):
+    """The EngramStore modelling the cost of ``strategy``'s placement."""
+    return STRATEGIES[strategy or ecfg.strategy].store(ecfg)
 
 
 # ---------------------------------------------------------------------------

@@ -56,4 +56,50 @@ def engram_gather(tables: jax.Array, idx: jax.Array, *,
     return rows.reshape(*batch_shape, T, hd)
 
 
-__all__ = ["engram_gather", "engram_gather_ref", "gather_rows"]
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()
+
+
+def pad_table_lanes(table: jax.Array) -> jax.Array:
+    """Pad a (V, hd) table's lane dim to the 128 boundary. Do this once at
+    table-construction time (it copies the whole table), then feed the
+    result to ``gather_rows_padded`` per wave."""
+    hd = table.shape[1]
+    hd_p = _pad_to(hd, 128)
+    if hd_p != hd:
+        table = jnp.pad(table, ((0, 0), (0, hd_p - hd)))
+    return table
+
+
+def gather_rows_padded(table: jax.Array, gid, *,
+                       interpret: bool | None = None,
+                       block_rows: int = 8) -> jax.Array:
+    """Variable-count row gather through the Pallas kernel.
+
+    ``gather_rows`` requires the row count to divide ``block_rows`` and a
+    128-aligned lane dim; cache-miss gathers (pool/store.py) produce an
+    *arbitrary* number of rows per wave. This wrapper pads the index
+    vector to the next power-of-two bucket (bounding jit recompiles to
+    O(log N) shapes as the miss count wanders), pads the lane dim if the
+    caller didn't (prefer ``pad_table_lanes`` once up front — padding
+    here copies the whole table per call), runs the kernel, and slices
+    the real rows back out.
+
+    table (V, hd); gid (N,) int — N may be anything >= 0 -> (N, hd).
+    """
+    gid = jnp.asarray(gid, jnp.int32)
+    N = int(gid.shape[0])
+    if N == 0:
+        return jnp.zeros((0, table.shape[1]), table.dtype)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    hd = table.shape[1]
+    table = pad_table_lanes(table)
+    n_p = _pad_to(_next_pow2(N), block_rows)
+    if n_p != N:
+        gid = jnp.pad(gid, (0, n_p - N))      # pad rows re-read row 0: cheap
+    rows = gather_rows(table, gid, interpret=interp, block_rows=block_rows)
+    return rows[:N, :hd]
+
+
+__all__ = ["engram_gather", "engram_gather_ref", "gather_rows",
+           "gather_rows_padded", "pad_table_lanes"]

@@ -15,30 +15,52 @@ import time
 
 import numpy as np
 
-from ..configs.base import get_config
+from ..configs.base import StoreConfig, get_config
 from ..models.model import init_params
 from ..models.transformer import RunFlags
 from ..serving import Engine
 from .train import reduced_config
 
 
+def with_store(cfg, *, cache_rows: int = 0, cache_tier: str = "DRAM",
+               prefetch_depth: int = 1):
+    """Return ``cfg`` with tiered-store knobs on its EngramConfig."""
+    if cfg.engram is None:
+        return cfg
+    scfg = StoreConfig(cache_rows=cache_rows, cache_tier=cache_tier,
+                       prefetch_depth=prefetch_depth)
+    return dataclasses.replace(
+        cfg, engram=dataclasses.replace(cfg.engram, store=scfg))
+
+
 def run_once(cfg, *, requests: int, max_new: int, pool, params=None,
              max_batch: int = 8, max_len: int = 256, seed: int = 0,
-             warmup: bool = False, emulate_step_s=None):
+             warmup: bool = False, emulate_step_s=None, cache_rows: int = 0,
+             zipf_alpha: float = 0.0):
     # deployment default: the §Perf-validated decode path (bf16 scores —
     # numerically equivalent per tests/test_perf_flags.py, ~7x less decode
     # cache traffic). The dry-run baselines keep RunFlags() defaults.
     flags = RunFlags(attn_bf16_scores=True)
+    if cache_rows:
+        cfg = with_store(cfg, cache_rows=cache_rows)
     eng = Engine(cfg, params=params, flags=flags, max_batch=max_batch,
                  max_len=max_len, pool=pool, seed=seed,
                  emulate_step_s=emulate_step_s)
     if warmup:
         eng.warmup()
     rng = np.random.RandomState(seed)
-    for _ in range(requests):
+    for r in range(requests):
         plen = int(rng.randint(4, 24))
-        eng.submit(list(rng.randint(1, cfg.vocab_size, size=plen)),
-                   max_new=max_new)
+        if zipf_alpha:
+            # Zipf-skewed token stream (the paper's n-gram reuse model) —
+            # hot prompts repeat, which is what a hot-row cache feeds on
+            from ..pool.cache import zipf_keys
+            toks = 1 + zipf_keys(plen, cfg.vocab_size - 1,
+                                 alpha=zipf_alpha, seed=seed * 1000 + r)
+            eng.submit([int(t) for t in toks], max_new=max_new)
+        else:
+            eng.submit(list(rng.randint(1, cfg.vocab_size, size=plen)),
+                       max_new=max_new)
     stats = eng.run()
     return eng, stats
 
@@ -52,19 +74,32 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--pool", default=None,
-                    choices=[None, "DRAM", "CXL", "RDMA", "HBM"], nargs="?")
+                    choices=[None, "DRAM", "CXL", "RDMA", "RDMA-agg", "HBM"],
+                    nargs="?")
+    ap.add_argument("--cache-rows", type=int, default=0,
+                    help="LRU hot-row cache capacity in front of the pool "
+                         "tier (0 = off; paper §6 rescue)")
     ap.add_argument("--compare", action="store_true",
                     help="run baseline / +Engram(DRAM) / +Engram(CXL)")
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if not args.compare:
-        _, stats = run_once(cfg, requests=args.requests, max_new=args.max_new,
-                            pool=args.pool, max_batch=args.max_batch,
-                            max_len=args.max_len)
+        eng, stats = run_once(cfg, requests=args.requests,
+                              max_new=args.max_new,
+                              pool=args.pool, max_batch=args.max_batch,
+                              max_len=args.max_len,
+                              cache_rows=args.cache_rows)
         print(f"pool={args.pool or 'local'}: {stats.generated_tokens} tokens "
               f"in {stats.wall_s:.2f}s = {stats.tokens_per_s:.1f} tok/s "
               f"(stall {stats.stall_s * 1e3:.1f} ms)")
+        if eng.store is not None and args.pool:
+            s = eng.store.stats()
+            print(f"store[{s.tier}]: {s.segments} segments, "
+                  f"hit_rate={s.hit_rate:.3f} "
+                  f"(cache={s.cache_rows} rows @ {s.cache_tier}), "
+                  f"stall/wave={s.stall_s_per_wave * 1e6:.1f} us, "
+                  f"hidden {s.hidden_waves}/{s.waves} waves")
         return 0
 
     # Table 2 shape: baseline (no engram) vs +Engram(DRAM) vs +Engram(CXL)

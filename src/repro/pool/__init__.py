@@ -6,3 +6,8 @@ from .simulator import (cached_read_latency_s, latency_sweep,
                         read_latency_s, rdma_rescue_sweep,
                         scalability_table, throughput_table)
 from .cost import CostRow, breakeven_nodes, cost_table, local_cost, pool_cost
+from .store import (CachedStore, EngramStore, LocalStore, PrefetchHandle,
+                    StoreStats, STRATEGY_TIERS, TableFetcher, TierStore,
+                    make_store, segment_keys, store_for_strategy)
+from .cache import LRUHotRowCache, zipf_keys
+from .scheduler import PrefetchScheduler, WaveReport

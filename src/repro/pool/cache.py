@@ -1,0 +1,106 @@
+"""LRU hot-row cache for Engram segments (the paper's §6 rescue).
+
+The paper argues n-gram reuse is Zipf-skewed, so a small DRAM cache of hot
+rows in front of a slow backing tier (RDMA, far CXL) captures most of the
+traffic. ``pool/simulator.py::cached_read_latency_s`` models that with an
+*assumed* hit rate; this module provides the measured counterpart: an LRU
+over (layer, table, row) keys that the serving engine feeds with the real
+per-wave index stream, so the hit rate entering the latency model is
+observed, not asserted.
+
+Keys are opaque ints (the store packs layer/table/row into one int64).
+A wave's accounting is batched: within one retrieval wave every duplicate
+key is a single fetch (the pooled strategy dedups the same way), so the
+cache counts *unique* keys — duplicates of an in-wave miss ride the same
+in-flight fetch and are neither hits nor extra misses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class WaveAccess:
+    """Per-wave cache accounting (unique-key granularity)."""
+    hits: int
+    misses: int
+
+    @property
+    def n_segments(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.n_segments
+        return self.hits / n if n else 0.0
+
+
+class LRUHotRowCache:
+    """Fixed-capacity LRU over opaque int row keys.
+
+    ``access_wave(keys)`` does the full per-wave transaction: classify each
+    unique key as hit/miss against the current state, move hits to MRU,
+    insert misses (evicting LRU rows beyond capacity), and accumulate the
+    running hit/miss totals that ``hit_rate`` reports.
+    """
+
+    def __init__(self, capacity_rows: int):
+        assert capacity_rows > 0, capacity_rows
+        self.capacity_rows = int(capacity_rows)
+        self._rows: OrderedDict[int, None] = OrderedDict()
+        self.total_hits = 0
+        self.total_misses = 0
+        self.waves = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def __contains__(self, key: int) -> bool:
+        return int(key) in self._rows
+
+    def access_wave(self, keys) -> WaveAccess:
+        uniq = np.unique(np.asarray(keys, dtype=np.int64))
+        rows = self._rows
+        hits = 0
+        for k in uniq.tolist():
+            if k in rows:
+                rows.move_to_end(k)
+                hits += 1
+            else:
+                rows[k] = None
+                if len(rows) > self.capacity_rows:
+                    rows.popitem(last=False)
+                    self.evictions += 1
+        misses = int(uniq.size) - hits
+        self.total_hits += hits
+        self.total_misses += misses
+        self.waves += 1
+        return WaveAccess(hits=hits, misses=misses)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.total_hits + self.total_misses
+        return self.total_hits / n if n else 0.0
+
+    def reset_stats(self) -> None:
+        self.total_hits = 0
+        self.total_misses = 0
+        self.waves = 0
+        self.evictions = 0
+
+
+def zipf_keys(n: int, vocab: int, *, alpha: float = 1.2,
+              seed: int = 0) -> np.ndarray:
+    """Zipf-distributed key stream over [0, vocab) — the paper's reuse
+    assumption, used by tests/benchmarks to drive the cache."""
+    rng = np.random.RandomState(seed)
+    ranks = rng.zipf(alpha, size=4 * n)
+    ranks = ranks[ranks <= vocab][:n]
+    while ranks.size < n:                      # heavy tail can over-reject
+        extra = rng.zipf(alpha, size=4 * n)
+        ranks = np.concatenate([ranks, extra[extra <= vocab]])[:n]
+    return (ranks - 1).astype(np.int64)

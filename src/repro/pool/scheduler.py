@@ -1,0 +1,96 @@
+"""Double-buffered prefetch scheduler for Engram waves.
+
+The paper's §3.2 window: Engram indices depend only on token IDs, so the
+retrieval for a decode wave can be issued the moment the previous wave's
+tokens are sampled — while wave N decodes, wave N+1's fetch is already in
+flight (in the engine this is realized by dispatching the jitted retrieval
+*before* the decode step is enqueued; XLA's async dispatch overlaps them).
+Per Engram layer k the fetch then has ``k`` layers of compute to hide in;
+only the overshoot beyond that window stalls the step.
+
+The scheduler owns that arithmetic for every wave (prefill and decode) and
+charges the result into the store's stats — the engine no longer carries
+its own stall formula. Pipeline depth (``StoreConfig.prefetch_depth``):
+
+  depth 0   synchronous: fetch issued at the Engram layer itself, window 0
+            (what serving without prefetch would pay);
+  depth 1   the paper's prefetch: issue at step start, window = k·t_exec;
+  depth d>1 (d-1) extra full decode steps of lookahead credit — only legal
+            when future tokens are already known (speculative decoding,
+            multi-token heads); an emulation knob, default off.
+
+One wave = one handle per Engram layer (the paper's N_eng independent
+per-layer fetches; each layer owns its tables, so each layer's key stream
+is distinct and the cache tracks them separately).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+from ..configs.base import EngramConfig
+from .store import EngramStore, PrefetchHandle
+
+
+@dataclasses.dataclass
+class WaveReport:
+    """Outcome of scheduling one retrieval wave."""
+    stall_s: float                     # total overshoot across Engram layers
+    latency_s: float                   # slowest per-layer fetch this wave
+    hidden: bool                       # every fetch fit its window
+    handles: list[PrefetchHandle]
+
+    def gather(self, store: EngramStore) -> Any:
+        """Materialize the wave's rows through the store."""
+        return store.gather(self.handles[0])
+
+
+class PrefetchScheduler:
+    """Issues per-layer prefetches through an ``EngramStore`` and charges
+    window overshoot. ``layers`` are the (0-indexed) transformer layers
+    hosting Engram; ``n_layers`` the total depth (defines t_exec)."""
+
+    def __init__(self, store: EngramStore, ecfg: EngramConfig,
+                 layers: Sequence[int], n_layers: int,
+                 prefetch_depth: Optional[int] = None):
+        self.store = store
+        self.ecfg = ecfg
+        self.layers = tuple(layers)
+        self.n_layers = max(int(n_layers), 1)
+        depth = ecfg.store.prefetch_depth if prefetch_depth is None \
+            else prefetch_depth
+        assert depth >= 0, depth
+        self.depth = depth
+
+    def window_s(self, layer_k: int, step_latency_s: float) -> float:
+        """Prefetch window for Engram layer ``layer_k`` at the given step
+        latency, including any pipeline-depth lookahead credit."""
+        if self.depth == 0:
+            return 0.0
+        t_exec = step_latency_s / self.n_layers
+        return layer_k * t_exec + (self.depth - 1) * step_latency_s
+
+    def step(self, keys_per_layer, step_latency_s: float,
+             fetch: Optional[Callable[[], Any]] = None) -> WaveReport:
+        """Schedule one wave.
+
+        ``keys_per_layer``: one packed-key array per Engram layer (measured
+        mode), or a bare token count applied to every layer (analytic
+        mode). ``fetch`` materializes the wave's rows on ``gather``.
+        """
+        if not isinstance(keys_per_layer, (list, tuple)):
+            keys_per_layer = [keys_per_layer] * len(self.layers)
+        assert len(keys_per_layer) == len(self.layers), \
+            (len(keys_per_layer), self.layers)
+        stall = 0.0
+        lat_max = 0.0
+        handles = []
+        for i, (k, keys) in enumerate(zip(self.layers, keys_per_layer)):
+            h = self.store.prefetch(keys, fetch=fetch if i == 0 else None)
+            handles.append(h)
+            stall += max(0.0, h.latency_s - self.window_s(k, step_latency_s))
+            lat_max = max(lat_max, h.latency_s)
+        hidden = stall == 0.0
+        self.store.note_wave(stall, hidden)
+        return WaveReport(stall_s=stall, latency_s=lat_max, hidden=hidden,
+                          handles=handles)

@@ -13,18 +13,21 @@ import dataclasses
 
 from ..configs.base import EngramConfig
 from .feasibility import ServingPoint
+from .store import CachedStore, TierStore, segment_bytes, segment_count
 from .tiers import TierSpec, TIERS
 
 
 def read_latency_s(ecfg: EngramConfig, tier: TierSpec, batch_tokens: int,
                    gpu_path: bool = False) -> float:
-    """Latency to read one Engram layer's embeddings for ``batch_tokens``."""
-    n_segments = batch_tokens * ecfg.n_tables
-    seg = ecfg.head_dim * 2
-    lat = tier.read_latency_s(n_segments, seg)
+    """Latency to read one Engram layer's embeddings for ``batch_tokens``.
+
+    Delegates to the ``EngramStore`` tier backend — the same code path the
+    serving engine charges, so tables and engine cannot drift apart."""
+    lat = TierStore(ecfg, tier).read_latency_s(batch_tokens)
     if gpu_path:
         # P2P wide-grid kernel: one launch (~8 us) + PCIe transfer
-        lat = lat + 8e-6 + n_segments * seg / 55e9
+        n_segments = segment_count(ecfg, batch_tokens)
+        lat = lat + 8e-6 + n_segments * segment_bytes(ecfg) / 55e9
     return lat
 
 
@@ -49,16 +52,15 @@ def cached_read_latency_s(ecfg: EngramConfig, backing: TierSpec,
     """Paper §6 (Discussion): a DRAM cache of 'hot' Engram rows in front of
     a slower backing tier. Zipf-distributed n-gram reuse makes high hit
     rates realistic; misses pay the backing tier on their own (smaller)
-    batch. Latency = max(hit path, miss path) — both proceed in parallel."""
+    batch. Latency = max(hit path, miss path) — both proceed in parallel.
+
+    Analytic entry point to ``CachedStore``: the same split-latency code
+    the serving engine charges with *measured* hit rates, evaluated here
+    at an assumed one."""
     from .tiers import DRAM
-    cache = cache_tier or DRAM
-    n_seg = batch_tokens * ecfg.n_tables
-    seg = ecfg.head_dim * 2
-    hits = int(round(n_seg * hit_rate))
-    misses = n_seg - hits
-    t_hit = cache.read_latency_s(hits, seg) if hits else 0.0
-    t_miss = backing.read_latency_s(misses, seg) if misses else 0.0
-    return max(t_hit, t_miss)
+    store = CachedStore(TierStore(ecfg, backing),
+                        cache_tier=cache_tier or DRAM)
+    return store.ideal_latency_s(batch_tokens, hit_rate)
 
 
 def rdma_rescue_sweep(ecfg: EngramConfig, point: "ServingPoint",
@@ -90,14 +92,18 @@ class ThroughputResult:
 def engram_step_overhead_s(ecfg: EngramConfig, point: ServingPoint,
                            tier: TierSpec, compute_overhead_s: float) -> tuple:
     """Per-decode-step cost of Engram: fixed compute (gating/proj) +
-    any retrieval overshoot beyond each layer's prefetch window."""
-    t_exec = point.step_latency_s / point.n_layers
-    stall = 0.0
-    for k in ecfg.layers:
-        window = max(k - 1, 0) * t_exec          # paper-convention window
-        lat = read_latency_s(ecfg, tier, point.batch_tokens)
-        stall += max(0.0, lat - window)
-    return compute_overhead_s + stall, stall == 0.0
+    any retrieval overshoot beyond each layer's prefetch window.
+
+    Charged by the same ``PrefetchScheduler`` the serving engine runs —
+    the analytic tables and the engine share one stall formula. The
+    paper's 1-indexed convention (layer k gets k-1 layers of window) maps
+    to the scheduler's 0-indexed windows via ``k - 1``."""
+    from .scheduler import PrefetchScheduler
+    sched = PrefetchScheduler(TierStore(ecfg, tier), ecfg,
+                              layers=[max(k - 1, 0) for k in ecfg.layers],
+                              n_layers=point.n_layers)
+    report = sched.step(point.batch_tokens, point.step_latency_s)
+    return compute_overhead_s + report.stall_s, report.hidden
 
 
 def throughput_table(ecfg: EngramConfig, point: ServingPoint,

@@ -1,0 +1,328 @@
+"""Tiered EngramStore: one object owning tier/latency/cache semantics.
+
+Before this subsystem the pool story was smeared across three layers —
+analytic tier math in ``pool/simulator.py``, retrieval strategies in
+``core/engram.py``, and a hand-rolled stall injector in
+``serving/engine.py`` — so the §6 hot-row cache existed only as a formula
+and never touched the serving path. The store unifies them:
+
+  * ``TierStore``     — one backend per ``TierSpec`` (HBM / DRAM / CXL /
+                        RDMA / RDMA-agg). Its latency IS
+                        ``TierSpec.read_latency_s`` on the segment count:
+                        the single code path the simulator tables and the
+                        serving engine both read from.
+  * ``LocalStore``    — weights resident on-device; no emulated pool cost
+                        (the engine's ``pool=None`` baseline).
+  * ``CachedStore``   — an LRU hot-row cache (``pool/cache.py``) in front
+                        of any backing store. Per wave it measures real
+                        hit/miss counts against the Zipf assumption and
+                        feeds the *measured* split into the same
+                        max(hit-path, miss-path) formula that
+                        ``simulator.cached_read_latency_s`` evaluates with
+                        an assumed rate.
+
+Division of labour with ``core/engram.py``: a retrieval *strategy* decides
+placement (which devices hold the rows and which collectives move them);
+the *store* decides what that placement costs (tier latency, cache,
+prefetch accounting). ``STRATEGY_TIERS`` maps each strategy onto the tier
+whose semantics it emulates.
+
+The protocol is deliberately tiny::
+
+    handle = store.prefetch(tokens_or_keys)   # issue the wave's retrieval
+    rows   = store.gather(handle)             # block on / materialize rows
+    stats  = store.stats()                    # measured hit rates + stalls
+
+``prefetch`` accepts either a flat array of packed segment keys (measured
+mode — the engine passes the wave's real (layer, table, row) stream) or a
+bare token count (analytic mode — the simulator's batch sweeps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from ..configs.base import EngramConfig
+from .cache import LRUHotRowCache, WaveAccess
+from .tiers import TIERS, TierSpec
+
+
+# ---------------------------------------------------------------------------
+# segment geometry + key packing
+# ---------------------------------------------------------------------------
+
+def segment_bytes(ecfg: EngramConfig) -> int:
+    return ecfg.head_dim * 2                       # bf16 rows
+
+
+def segment_count(ecfg: EngramConfig, batch_tokens: int) -> int:
+    return batch_tokens * ecfg.n_tables
+
+
+def segment_keys(ecfg: EngramConfig, idx, layer_slot: int = 0) -> np.ndarray:
+    """Pack table-row indices ``idx (..., T)`` into flat int64 segment keys
+    ``(layer_slot * T + t) * table_vocab + row`` — the cache's identity."""
+    a = np.asarray(idx, dtype=np.int64)
+    T = ecfg.n_tables
+    assert a.shape[-1] == T, (a.shape, T)
+    tid = np.arange(T, dtype=np.int64) + layer_slot * T
+    return (a + tid * ecfg.table_vocab).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# handles + stats
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PrefetchHandle:
+    """An issued (in-flight) retrieval wave."""
+    n_segments: int                    # unique segments actually fetched
+    latency_s: float                   # store-modelled completion latency
+    hits: int = 0
+    misses: int = 0
+    fetch: Optional[Callable[[], Any]] = None    # materializes the rows
+    rows: Any = None
+    gathered: bool = False
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Measured store-side accounting (the engine surfaces this verbatim)."""
+    tier: str
+    cache_tier: Optional[str] = None
+    cache_rows: int = 0
+    prefetches: int = 0
+    gathers: int = 0
+    segments: int = 0                  # unique segments fetched
+    hits: int = 0
+    misses: int = 0
+    waves: int = 0                     # scheduler-charged waves
+    hidden_waves: int = 0              # waves fully inside the window
+    stall_s: float = 0.0               # accumulated overshoot
+    retrieval_s: float = 0.0           # accumulated modelled latency
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    @property
+    def stall_s_per_wave(self) -> float:
+        return self.stall_s / self.waves if self.waves else 0.0
+
+
+@runtime_checkable
+class EngramStore(Protocol):
+    def prefetch(self, tokens, fetch: Optional[Callable[[], Any]] = None
+                 ) -> PrefetchHandle: ...
+    def gather(self, handle: PrefetchHandle) -> Any: ...
+    def stats(self) -> StoreStats: ...
+    def read_latency_s(self, batch_tokens: int) -> float: ...
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+class _StoreBase:
+    """Shared prefetch/gather bookkeeping; subclasses define the latency."""
+
+    def __init__(self, ecfg: EngramConfig, tier_name: str):
+        self.ecfg = ecfg
+        self._stats = StoreStats(tier=tier_name)
+
+    # latency model -----------------------------------------------------
+    def latency_for_segments(self, n_segments: int) -> float:
+        raise NotImplementedError
+
+    def read_latency_s(self, batch_tokens: int) -> float:
+        """Analytic read latency for a full (uncached) token batch."""
+        return self.latency_for_segments(segment_count(self.ecfg, batch_tokens))
+
+    # protocol ----------------------------------------------------------
+    def _classify(self, tokens) -> tuple[int, int, int]:
+        """-> (n_segments, hits, misses) for a wave.
+
+        Measured mode (key array) counts *unique* keys: in-wave dedup is a
+        property of the retrieval path itself (the pooled strategy dedups
+        identically), not of the cache — pricing duplicates here would
+        misattribute dedup savings to the LRU when cached and uncached
+        runs are compared. Analytic mode (int token count) keeps the
+        paper's raw B-discrete-reads convention."""
+        if np.isscalar(tokens) or isinstance(tokens, int):
+            n = segment_count(self.ecfg, int(tokens))
+        else:
+            n = int(np.unique(np.asarray(tokens, dtype=np.int64)).size)
+        return n, 0, n
+
+    def prefetch(self, tokens, fetch: Optional[Callable[[], Any]] = None
+                 ) -> PrefetchHandle:
+        n, hits, misses = self._classify(tokens)
+        lat = self._split_latency(hits, misses)
+        h = PrefetchHandle(n_segments=n, latency_s=lat, hits=hits,
+                           misses=misses, fetch=fetch)
+        s = self._stats
+        s.prefetches += 1
+        s.segments += n
+        s.hits += hits
+        s.misses += misses
+        s.retrieval_s += lat
+        return h
+
+    def _split_latency(self, hits: int, misses: int) -> float:
+        return self.latency_for_segments(hits + misses)
+
+    def gather(self, handle: PrefetchHandle) -> Any:
+        if not handle.gathered:
+            if handle.fetch is not None:
+                handle.rows = handle.fetch()
+            handle.gathered = True
+            self._stats.gathers += 1
+        return handle.rows
+
+    def note_wave(self, stall_s: float, hidden: bool) -> None:
+        s = self._stats
+        s.waves += 1
+        s.stall_s += stall_s
+        s.hidden_waves += int(hidden)
+
+    def stats(self) -> StoreStats:
+        return self._stats
+
+    def reset_stats(self) -> None:
+        old = self._stats
+        self._stats = StoreStats(tier=old.tier, cache_tier=old.cache_tier,
+                                 cache_rows=old.cache_rows)
+
+
+class TierStore(_StoreBase):
+    """Engram rows resident in one memory tier of the paper's fabric."""
+
+    def __init__(self, ecfg: EngramConfig, tier: TierSpec | str):
+        tier = TIERS[tier] if isinstance(tier, str) else tier
+        super().__init__(ecfg, tier.name)
+        self.tier = tier
+
+    def latency_for_segments(self, n_segments: int) -> float:
+        if n_segments <= 0:
+            return 0.0
+        return self.tier.read_latency_s(n_segments, segment_bytes(self.ecfg))
+
+
+class LocalStore(_StoreBase):
+    """Rows co-resident with the activations (device HBM / local weights):
+    the retrieval is part of the forward pass, no emulated pool cost."""
+
+    def __init__(self, ecfg: EngramConfig):
+        super().__init__(ecfg, "local")
+
+    def latency_for_segments(self, n_segments: int) -> float:
+        return 0.0
+
+
+class CachedStore(_StoreBase):
+    """LRU hot-row cache (``cache_tier``) in front of a backing store.
+
+    Hit and miss paths proceed in parallel (independent hardware), so the
+    wave completes at ``max(hit path, miss path)`` — the same formula
+    ``simulator.cached_read_latency_s`` uses, evaluated here with the
+    *measured* per-wave split instead of an assumed Zipf hit rate.
+    """
+
+    def __init__(self, backing: TierStore, cache_tier: TierSpec | str = "DRAM",
+                 cache: Optional[LRUHotRowCache] = None):
+        super().__init__(backing.ecfg, backing.tier.name)
+        self.backing = backing
+        self.cache_tier = TIERS[cache_tier] if isinstance(cache_tier, str) \
+            else cache_tier
+        self.cache = cache
+        self._stats.cache_tier = self.cache_tier.name
+        # NB: the cache defines __len__, so test identity, not truthiness
+        self._stats.cache_rows = 0 if cache is None else cache.capacity_rows
+
+    def latency_for_segments(self, n_segments: int) -> float:
+        return self.backing.latency_for_segments(n_segments)
+
+    def _split_latency(self, hits: int, misses: int) -> float:
+        seg = segment_bytes(self.ecfg)
+        t_hit = self.cache_tier.read_latency_s(hits, seg) if hits else 0.0
+        t_miss = self.backing.latency_for_segments(misses)
+        return max(t_hit, t_miss)
+
+    def ideal_latency_s(self, batch_tokens: int, hit_rate: float) -> float:
+        """Analytic mode (the §6 formula): assume ``hit_rate`` instead of
+        consulting the LRU — used by the simulator's rescue sweeps."""
+        n = segment_count(self.ecfg, batch_tokens)
+        hits = int(round(n * hit_rate))
+        return self._split_latency(hits, n - hits)
+
+    def _classify(self, tokens) -> tuple[int, int, int]:
+        if np.isscalar(tokens) or isinstance(tokens, int) or self.cache is None:
+            return super()._classify(tokens)
+        wave: WaveAccess = self.cache.access_wave(tokens)
+        return wave.n_segments, wave.hits, wave.misses
+
+
+# ---------------------------------------------------------------------------
+# row materialization (cache-miss gathers through the Pallas path)
+# ---------------------------------------------------------------------------
+
+class TableFetcher:
+    """Materializes rows for flat packed segment keys from one layer's
+    Engram tables ``(T, V, hd)`` via the variable-count Pallas gather
+    (``kernels/engram_gather.gather_rows_padded``) — so a cache-miss wave
+    of *arbitrary* segment count still takes the kernel hot path."""
+
+    def __init__(self, ecfg: EngramConfig, tables):
+        from ..kernels.engram_gather.ops import pad_table_lanes
+        self.ecfg = ecfg
+        self.T, self.V, self.hd = tables.shape
+        # pad lanes to the 128 boundary ONCE — per-call padding would copy
+        # the full (T*V, hd) table on every cache-miss wave
+        self.flat = pad_table_lanes(tables.reshape(self.T * self.V, self.hd))
+
+    def __call__(self, keys) -> Any:
+        from ..kernels.engram_gather.ops import gather_rows_padded
+        keys = np.asarray(keys, np.int64)
+        tid = (keys // self.ecfg.table_vocab) % self.ecfg.n_tables
+        row = keys % self.ecfg.table_vocab
+        gid = tid * self.V + row                    # flat (T*V) row space
+        return gather_rows_padded(self.flat, gid)[:, :self.hd]
+
+
+# ---------------------------------------------------------------------------
+# strategy mapping + factory
+# ---------------------------------------------------------------------------
+
+# Which tier's latency semantics each retrieval strategy emulates when no
+# explicit pool tier is requested (strategy = placement; store = cost).
+STRATEGY_TIERS: dict[str, Optional[str]] = {
+    "local": None,             # replicated next to the activations
+    "local_kernel": None,      # same placement, Pallas gather path
+    "tp": None,                # row-sharded over the model axis (HBM)
+    "pooled": "CXL",           # the paper's CXL pool
+    "pooled_host": "DRAM",     # host pinned memory
+}
+
+
+def make_store(ecfg: EngramConfig, tier: TierSpec | str | None,
+               store_cfg=None) -> EngramStore:
+    """Build the store for a backing tier, honouring ``ecfg.store`` knobs
+    (cache capacity / cache tier). ``tier=None`` -> LocalStore."""
+    scfg = store_cfg if store_cfg is not None else ecfg.store
+    if tier is None:
+        return LocalStore(ecfg)
+    base = TierStore(ecfg, tier)
+    if scfg is not None and scfg.cache_rows > 0:
+        return CachedStore(base, cache_tier=scfg.cache_tier,
+                           cache=LRUHotRowCache(scfg.cache_rows))
+    return base
+
+
+def store_for_strategy(ecfg: EngramConfig,
+                       strategy: Optional[str] = None) -> EngramStore:
+    """Resolve a retrieval strategy to the store modelling its tier."""
+    s = strategy or ecfg.strategy
+    return make_store(ecfg, STRATEGY_TIERS[s])

@@ -15,11 +15,16 @@ Maps the paper's §4.3 integration onto a self-contained JAX engine:
     prefills mid-flight (requests join/leave without draining the batch).
 
 Pool-tier emulation: on real hardware the Engram fetch either hides inside
-the prefetch window or stalls the step (paper §3.2). The engine reproduces
-that with the calibrated tier models — per wave it computes the retrieval
-latency for the active token count and sleeps max(0, latency - window).
-`pool=None` (weights local/HBM) injects nothing: that is the baseline and
-the '+Engram (DRAM-local)' configs of Table 2 differ only by engram compute.
+the prefetch window or stalls the step (paper §3.2). The engine delegates
+that entirely to the tiered ``EngramStore`` subsystem (pool/store.py): a
+``PrefetchScheduler`` issues each wave's retrieval through the store —
+which owns tier latency, the optional LRU hot-row cache, and measured
+hit-rate accounting — and the engine sleeps (real point) or accounts
+(emulated point) only the overshoot the scheduler reports. `pool=None`
+(weights local/HBM) resolves to a ``LocalStore`` with zero emulated cost:
+that is the baseline, and the '+Engram (DRAM-local)' configs of Table 2
+differ only by engram compute. ``engine.store.stats()`` exposes the
+store-measured hit rates and stall totals.
 """
 from __future__ import annotations
 
@@ -34,11 +39,12 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.engram import retrieve
-from ..core.hashing import decode_engram_indices
+from ..core.hashing import decode_engram_indices, engram_indices
 from ..models.model import (build_decode_step, build_prefill_step,
                             init_decode_state, init_params)
 from ..models.transformer import RunFlags
-from ..pool.simulator import read_latency_s
+from ..pool.scheduler import PrefetchScheduler
+from ..pool.store import make_store, segment_keys
 from ..pool.tiers import TIERS
 from .slots import update_slots
 
@@ -100,6 +106,23 @@ class Engine:
         self.params = params if params is not None else init_params(cfg, seed)
         self.has_engram = bool(cfg.engram_layers()) and "engram" in self.params
 
+        # tiered store + prefetch scheduler (pool/store.py): the single
+        # owner of tier latency / cache / stall semantics. pool=None maps
+        # to a LocalStore (no emulated pool cost — the Table 2 baseline).
+        self.store = None
+        self.scheduler = None
+        if self.has_engram:
+            self.store = make_store(cfg.engram, pool)
+            self.scheduler = PrefetchScheduler(self.store, cfg.engram,
+                                               layers=cfg.engram_layers(),
+                                               n_layers=cfg.n_layers)
+
+        # jitted index fn for store accounting (host-side key packing needs
+        # the values, so each charged wave pays one device sync; that cost
+        # is measurement overhead on pool runs, excluded from pool=None)
+        self._decode_idx = (jax.jit(
+            lambda last, tok: decode_engram_indices(cfg.engram, last, tok))
+            if self.has_engram else None)
         self._prefill = jax.jit(build_prefill_step(cfg, flags,
                                                    max_len=max_len))
         self._decode = jax.jit(build_decode_step(cfg, flags))
@@ -163,7 +186,11 @@ class Engine:
             if self.emulate_step_s is not None:
                 self.stats.emu_time_s += self.emulate_step_s
             if self.pool is not None and self.has_engram:
-                self._inject_pool_stall(len(req.prompt), prefill=True)
+                # prompt-wide retrieval wave through the store: real keys,
+                # so a configured hot-row cache warms on prefill traffic
+                toks_np = np.asarray([req.prompt], np.int32)
+                idx = np.asarray(engram_indices(self.cfg.engram, toks_np))
+                self._charge_wave(idx)
             logits, new_state = self._prefill(self.params, batch)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (1,)
             self.state = self._insert(self.state, new_state,
@@ -194,12 +221,23 @@ class Engine:
         t0 = time.perf_counter()
         if self.emulate_step_s is not None:
             self.stats.emu_time_s += self.emulate_step_s
-        if self.pool is not None and self.has_engram:
-            self._inject_pool_stall(len(active), prefill=False)
+        fetch = None
         if self._decode_ext is not None:
-            # the paper's prefetch: retrieval dispatched as its own call
-            rows = self._prefetch(self.params, self.state["last_tokens"],
-                                  self.tokens)
+            # the paper's prefetch: retrieval dispatched as its own call,
+            # materialized through the store (prefetch -> gather)
+            fetch = lambda: self._prefetch(self.params,
+                                           self.state["last_tokens"],
+                                           self.tokens)
+        if self.pool is not None and self.has_engram:
+            # the active slots' real segment-key stream: the store's cache
+            # measures hit rates on it, the scheduler charges the overshoot
+            idx = np.asarray(self._decode_idx(self.state["last_tokens"],
+                                              self.tokens))
+            rows = self._charge_wave(idx[np.asarray(active)], fetch=fetch)
+        elif fetch is not None:
+            rows = self.store.gather(
+                self.store.prefetch(len(active), fetch=fetch))
+        if self._decode_ext is not None:
             logits, self.state = self._decode_ext(self.params, self.state,
                                                   self.tokens, rows)
         else:
@@ -231,20 +269,24 @@ class Engine:
             return 1e-3
         return float(np.median(self._step_times[-32:]))
 
-    def _inject_pool_stall(self, n_tokens: int, prefill: bool) -> None:
-        """Account (emulated point) or sleep (real point) the retrieval
-        overshoot beyond each Engram layer's prefetch window."""
+    def _charge_wave(self, idx: np.ndarray, fetch=None):
+        """Issue one retrieval wave through the store and charge its stall.
+
+        ``idx (B, S, T)`` are the wave's table-row indices; they become one
+        packed segment-key stream per Engram layer (each layer owns its
+        tables), so a configured hot-row cache measures real reuse. The
+        scheduler computes the per-layer window overshoot, which is slept
+        (real point) or accounted (emulated point). Returns the gathered
+        rows when ``fetch`` is given."""
         e = self.cfg.engram
-        step = self._step_estimate_s()
-        t_exec = step / max(self.cfg.n_layers, 1)
-        stall = 0.0
-        for k in self.cfg.engram_layers():
-            window = k * t_exec            # k preceding layers (0-indexed)
-            lat = read_latency_s(e, self.pool, n_tokens)
-            stall += max(0.0, lat - window)
-        self.stats.stall_s += stall
+        keys = [segment_keys(e, idx, layer_slot=j)
+                for j in range(len(self.cfg.engram_layers()))]
+        report = self.scheduler.step(keys, self._step_estimate_s(),
+                                     fetch=fetch)
+        self.stats.stall_s += report.stall_s
         if self.emulate_step_s is None:
-            if stall > 0:
-                time.sleep(stall)
+            if report.stall_s > 0:
+                time.sleep(report.stall_s)
         else:
-            self.stats.emu_time_s += stall
+            self.stats.emu_time_s += report.stall_s
+        return report.gather(self.store) if fetch is not None else None

@@ -1,8 +1,10 @@
-"""Property tests for the Engram multi-head n-gram hashing (hypothesis)."""
+"""Property tests for the Engram multi-head n-gram hashing (hypothesis,
+with a deterministic fallback sampler when it isn't installed)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import EngramConfig
 from repro.core.hashing import (decode_engram_indices, engram_indices,

@@ -2,7 +2,8 @@
 throughput emulation (Tables 2/3), capex model (Tables 4/5)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import ENGRAM_27B, ENGRAM_40B, EngramConfig
 from repro.pool import (TIERS, check, check_all_tiers, cost_table,

@@ -1,0 +1,234 @@
+"""Tiered EngramStore subsystem: cache accounting vs the §6 formula,
+prefetch-scheduler window hiding, LRU-under-Zipf behaviour, store-vs-
+simulator tier agreement, and the end-to-end RDMA rescue on the engine."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conftest import reduced
+
+from repro.configs.base import ENGRAM_27B, EngramConfig, StoreConfig
+from repro.pool import TIERS, paper_case_study
+from repro.pool.cache import LRUHotRowCache, zipf_keys
+from repro.pool.scheduler import PrefetchScheduler
+from repro.pool.simulator import cached_read_latency_s, read_latency_s
+from repro.pool.store import (CachedStore, LocalStore, TierStore, make_store,
+                              segment_count, segment_keys,
+                              store_for_strategy)
+
+E27 = EngramConfig(**ENGRAM_27B)
+
+
+# ------------------------------------------------------------ store vs sim
+
+@pytest.mark.parametrize("tier", sorted(TIERS))
+def test_store_matches_simulator_every_tier(tier):
+    """The analytic tables and the store charge the same tier latency."""
+    store = TierStore(E27, tier)
+    for b in (1, 8, 64, 256, 1024):
+        assert store.read_latency_s(b) == pytest.approx(
+            read_latency_s(E27, TIERS[tier], b), rel=1e-12)
+
+
+def test_prefetch_counts_and_latency_consistent():
+    store = TierStore(E27, "CXL")
+    h_int = store.prefetch(64)                      # analytic: token count
+    keys = np.arange(segment_count(E27, 64))
+    h_keys = store.prefetch(keys)                   # measured: key stream
+    assert h_int.n_segments == h_keys.n_segments == segment_count(E27, 64)
+    assert h_int.latency_s == pytest.approx(h_keys.latency_s)
+    s = store.stats()
+    assert s.prefetches == 2
+    assert s.segments == 2 * segment_count(E27, 64)
+
+
+def test_local_store_is_free():
+    store = LocalStore(E27)
+    assert store.read_latency_s(1024) == 0.0
+    assert store.prefetch(1024).latency_s == 0.0
+
+
+def test_strategy_resolves_through_store():
+    """strategy = placement; store = cost. pooled -> CXL semantics."""
+    assert store_for_strategy(E27, "pooled").stats().tier == "CXL"
+    assert store_for_strategy(E27, "pooled_host").stats().tier == "DRAM"
+    assert isinstance(store_for_strategy(E27, "local"), LocalStore)
+
+
+# ------------------------------------------------- cache accounting (§6)
+
+def test_cached_store_matches_cached_read_latency():
+    """Measured hit/miss split through CachedStore == the analytic §6
+    formula at the same hit rate."""
+    b = 64
+    n_seg = segment_count(E27, b)                   # 1024
+    store = CachedStore(TierStore(E27, "RDMA"), cache_tier="DRAM",
+                        cache=LRUHotRowCache(4 * n_seg))
+    store.prefetch(np.arange(n_seg))                # prime: all miss
+    half = n_seg // 2
+    wave = np.concatenate([np.arange(half),                  # hits
+                           np.arange(10 * n_seg, 10 * n_seg + half)])
+    h = store.prefetch(wave)
+    assert (h.hits, h.misses) == (half, half)
+    assert h.latency_s == pytest.approx(
+        cached_read_latency_s(E27, TIERS["RDMA"], b, 0.5), rel=1e-12)
+    # full-hit wave == the formula at hit_rate 1.0
+    h2 = store.prefetch(np.arange(n_seg))
+    assert h2.misses == 0
+    assert h2.latency_s == pytest.approx(
+        cached_read_latency_s(E27, TIERS["RDMA"], b, 1.0), rel=1e-12)
+
+
+def test_in_wave_duplicates_are_single_fetches():
+    """Duplicates inside one wave ride the same in-flight fetch (the
+    pooled strategy dedups identically) — one miss, not N."""
+    store = CachedStore(TierStore(E27, "RDMA"), cache=LRUHotRowCache(100))
+    h = store.prefetch(np.zeros(64, np.int64))
+    assert (h.hits, h.misses) == (0, 1)
+    h2 = store.prefetch(np.zeros(64, np.int64))
+    assert (h2.hits, h2.misses) == (1, 0)
+
+
+def test_segment_keys_pack_layer_table_row():
+    idx = np.zeros((1, 2, E27.n_tables), np.int64)
+    idx[0, 0, :] = 7
+    k0 = segment_keys(E27, idx, layer_slot=0)
+    k1 = segment_keys(E27, idx, layer_slot=1)
+    assert k0.shape == (2 * E27.n_tables,)
+    assert len(set(k0.tolist()) & set(k1.tolist())) == 0   # layers disjoint
+    # same (row, table) in the same layer -> same key
+    assert k0[0] == 7 and k0[E27.n_tables] == 0
+
+
+# ----------------------------------------------------------- LRU + Zipf
+
+def test_lru_evicts_cold_keeps_hot_under_zipf():
+    cache = LRUHotRowCache(2_000)
+    stream = zipf_keys(200_000, 1_000_000, alpha=1.2, seed=0)
+    for i in range(0, 200_000, 1_024):
+        cache.access_wave(stream[i:i + 1_024])
+    assert len(cache) == 2_000                      # at capacity
+    assert cache.evictions > 0
+    # Zipf skew: a small LRU (0.2% of vocab) still captures a large share
+    assert cache.hit_rate > 0.4
+    # the hottest key must be resident, a one-off cold key must not
+    hot = np.bincount(stream % 1_000_000).argmax()
+    assert int(hot) in cache
+    # uniform traffic at the same capacity does far worse
+    uni = LRUHotRowCache(2_000)
+    u_stream = np.random.RandomState(0).randint(0, 1_000_000, 200_000)
+    for i in range(0, 200_000, 1_024):
+        uni.access_wave(u_stream[i:i + 1_024])
+    assert uni.hit_rate < 0.1 < 0.4 < cache.hit_rate
+
+
+# ------------------------------------------------------------- scheduler
+
+def test_scheduler_hides_when_window_allows():
+    """CXL fits the paper point's window (hidden); RDMA overshoots."""
+    point = paper_case_study()
+    layers = [k - 1 for k in E27.layers]            # paper 1-indexed -> 0
+    cxl = PrefetchScheduler(TierStore(E27, "CXL"), E27, layers,
+                            point.n_layers)
+    r = cxl.step(point.batch_tokens, point.step_latency_s)
+    assert r.hidden and r.stall_s == 0.0
+    rdma = PrefetchScheduler(TierStore(E27, "RDMA"), E27, layers,
+                             point.n_layers)
+    r2 = rdma.step(point.batch_tokens, point.step_latency_s)
+    assert not r2.hidden and r2.stall_s > 0.0
+    assert rdma.store.stats().stall_s == pytest.approx(r2.stall_s)
+
+
+def test_scheduler_depth_semantics():
+    """depth 0 = no window (sync fetch); deeper pipelines widen it."""
+    point = paper_case_study()
+    store = TierStore(E27, "CXL")
+    sync = PrefetchScheduler(store, E27, [1], point.n_layers,
+                             prefetch_depth=0)
+    assert sync.window_s(1, point.step_latency_s) == 0.0
+    r = sync.step(point.batch_tokens, point.step_latency_s)
+    assert r.stall_s == pytest.approx(r.latency_s)  # nothing hidden
+    deep = PrefetchScheduler(store, E27, [1], point.n_layers,
+                             prefetch_depth=2)
+    assert deep.window_s(1, point.step_latency_s) == pytest.approx(
+        point.step_latency_s / point.n_layers + point.step_latency_s)
+
+
+def test_scheduler_cached_store_rescues_rdma():
+    """§6 analytically: a hot cache turns RDMA stalls into hidden waves."""
+    point = paper_case_study()
+    layers = [k - 1 for k in E27.layers]
+    n_seg = segment_count(E27, point.batch_tokens)
+    store = CachedStore(TierStore(E27, "RDMA"), cache_tier="DRAM",
+                        cache=LRUHotRowCache(4 * n_seg))
+    sched = PrefetchScheduler(store, E27, layers, point.n_layers)
+    keys = [np.arange(n_seg) + j * 10 * n_seg for j in range(len(layers))]
+    cold = sched.step(keys, point.step_latency_s)
+    warm = sched.step(keys, point.step_latency_s)   # same rows: all hits
+    assert cold.stall_s > 0.0
+    assert warm.hidden and warm.stall_s == 0.0
+    assert store.stats().hit_rate == pytest.approx(0.5)
+
+
+# -------------------------------------------------- engine end-to-end
+
+def _tiny_cfg(cache_rows: int = 0):
+    cfg = reduced("deepseek-7b")
+    e = dataclasses.replace(cfg.engram, layers=(1,),
+                            store=StoreConfig(cache_rows=cache_rows))
+    return dataclasses.replace(cfg, n_layers=3, layer_types=("attn",) * 3,
+                               attn_kinds=("global",) * 3,
+                               ffn_types=("dense",) * 3, engram=e)
+
+
+def _run_repeated(cfg, pool, requests=12):
+    from repro.models.model import init_params
+    from repro.serving import Engine
+    params = init_params(cfg, 0)
+    eng = Engine(cfg, params=params, max_batch=1, max_len=32,
+                 prompt_bucket=8, pool=pool, emulate_step_s=5e-5)
+    for _ in range(requests):                       # identical requests:
+        eng.submit([5, 17, 42], max_new=4)          # Zipf worst case, hot
+    stats = eng.run()
+    return eng, stats
+
+
+def test_engine_reports_store_stats():
+    """Engine(pool=CXL/RDMA) surfaces measured stats via store.stats()."""
+    for pool in ("CXL", "RDMA"):
+        eng, stats = _run_repeated(_tiny_cfg(), pool, requests=3)
+        s = eng.store.stats()
+        assert s.tier == pool
+        assert s.waves > 0 and s.segments > 0
+        assert s.stall_s == pytest.approx(stats.stall_s)
+        assert s.hit_rate == 0.0                    # no cache configured
+
+
+def test_engine_rdma_rescue_end_to_end():
+    """The acceptance criterion: with an LRU hot-row cache at >=0.9
+    measured hit rate, an RDMA-backed run's stall per wave drops below
+    the uncached RDMA stall — §6 executed, not just computed."""
+    cfg = _tiny_cfg()
+    eng_plain, _ = _run_repeated(cfg, "RDMA")
+    plain = eng_plain.store.stats()
+    assert plain.stall_s > 0.0                      # RDMA overshoots
+
+    eng_cached, _ = _run_repeated(_tiny_cfg(cache_rows=100_000), "RDMA")
+    cached = eng_cached.store.stats()
+    assert cached.cache_rows == 100_000
+    assert cached.hit_rate >= 0.9                   # measured, not assumed
+    assert cached.stall_s_per_wave < plain.stall_s_per_wave
+    assert cached.stall_s < plain.stall_s
+
+
+def test_engine_cxl_near_dram_through_store():
+    """Store-charged stalls preserve the paper's Table 2 ordering."""
+    cfg = _tiny_cfg()
+    _, dram = _run_repeated(cfg, "DRAM", requests=3)
+    _, cxl = _run_repeated(cfg, "CXL", requests=3)
+    _, rdma = _run_repeated(cfg, "RDMA", requests=3)
+    assert dram.stall_s == 0.0
+    assert cxl.stall_s == 0.0
+    assert rdma.stall_s > 0.0
+    assert cxl.tokens_per_s_emulated > 0.95 * dram.tokens_per_s_emulated
