@@ -1,0 +1,135 @@
+"""Speculative decoding: acceptance rate x tier latency (§3.2 lookahead).
+
+Two sources, reported side by side:
+
+  * an *analytic* acceptance x tier grid: per-token emulated decode time
+    when one verify wave of (1 + a·k) surviving tokens replaces that many
+    sequential steps, with the per-position stall windows the scheduler
+    charges (accepted positions enjoy real lookahead; position 0 keeps
+    the narrow window and pays for mis-speculation);
+  * a *measured* engine comparison: the tiny serving engine in plain vs
+    speculate mode on a repetitive workload (the n-gram proposer's best
+    case and the paper's Zipf-reuse regime), reporting emulated tokens/s,
+    measured acceptance, the store's measured prefetch-window depth in
+    decode steps, and the wasted-prefetch fraction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ENGRAM_27B, EngramConfig, SpecConfig
+from repro.pool.scheduler import PrefetchScheduler
+from repro.pool.store import TierStore
+
+from .common import emit, write_csv
+
+STEP_S = 5e-5                 # emulated production decode step
+MAX_DRAFT = 3
+
+
+def _tiny_cfg():
+    from repro.configs.deepseek_7b import reduced
+    cfg = reduced()
+    return dataclasses.replace(cfg, n_layers=3, layer_types=("attn",) * 3,
+                               attn_kinds=("global",) * 3,
+                               ffn_types=("dense",) * 3,
+                               engram=dataclasses.replace(cfg.engram,
+                                                          layers=(1,)))
+
+
+def analytic_grid(ecfg: EngramConfig, tiers=("CXL", "RDMA"),
+                  accepts=(0.0, 0.25, 0.5, 0.75, 1.0),
+                  batch_tokens: int = 64, n_layers: int = 36) -> list:
+    """Per-token emulated time under speculation at acceptance ``a``:
+    one verify wave emits 1 + a·k tokens for one step of compute plus the
+    stall of its surviving positions (charged through the same
+    ``PrefetchScheduler.speculative_wave`` the engine uses)."""
+    rows = []
+    m = MAX_DRAFT + 1
+    layers = [k - 1 for k in ecfg.layers]
+    for tier in tiers:
+        for a in accepts:
+            n_keep = 1 + round(a * MAX_DRAFT)
+            store = TierStore(ecfg, tier)
+            sched = PrefetchScheduler(store, ecfg, layers, n_layers)
+            # plain serving: one wave per token, window = k·t_exec
+            plain = sched.step(batch_tokens, STEP_S)
+            t_plain = STEP_S + plain.stall_s
+            # speculated wave: m positions issued at wave start
+            rep = sched.speculative_wave([batch_tokens] * m, STEP_S)
+            stall = sched.charge_spec(rep, n_keep)
+            t_spec = (STEP_S + stall) / n_keep
+            s = store.stats()
+            rows.append({
+                "tier": tier, "accept": a, "n_keep": n_keep,
+                "plain_us_per_tok": t_plain * 1e6,
+                "spec_us_per_tok": t_spec * 1e6,
+                "speedup": t_plain / t_spec if t_spec else 0.0,
+                "window_steps": s.spec_window_steps,
+                "wasted_rate": s.wasted_prefetch_rate,
+            })
+    return rows
+
+
+def measured_engine(pool: str, *, speculate: bool, requests: int = 10,
+                    max_new: int = 8):
+    """Tiny engine on a repetitive workload (identical prompts: greedy
+    replay is the n-gram proposer's steady state)."""
+    from repro.models.model import init_params
+    from repro.serving import Engine
+    cfg = _tiny_cfg()
+    params = init_params(cfg, 0)
+    spec = SpecConfig(max_draft=MAX_DRAFT) if speculate else None
+    eng = Engine(cfg, params=params, max_batch=2, max_len=64,
+                 prompt_bucket=8, pool=pool, emulate_step_s=STEP_S,
+                 spec=spec)
+    for _ in range(requests):
+        eng.submit([5, 17, 42], max_new=max_new)
+    stats = eng.run()
+    return eng, stats
+
+
+def run(fast: bool = False) -> None:
+    e27 = EngramConfig(**ENGRAM_27B)
+    grid = analytic_grid(e27, accepts=(0.0, 0.5, 1.0) if fast
+                         else (0.0, 0.25, 0.5, 0.75, 1.0))
+    write_csv("speculation_grid",
+              ["tier", "accept", "n_keep", "plain_us_per_tok",
+               "spec_us_per_tok", "speedup", "window_steps", "wasted_rate"],
+              [[r["tier"], r["accept"], r["n_keep"],
+                round(r["plain_us_per_tok"], 3),
+                round(r["spec_us_per_tok"], 3), round(r["speedup"], 3),
+                round(r["window_steps"], 3), round(r["wasted_rate"], 3)]
+               for r in grid])
+    for r in grid:
+        emit(f"speculation/grid_{r['tier']}_a{r['accept']}",
+             r["spec_us_per_tok"],
+             f"plain={r['plain_us_per_tok']:.1f}us "
+             f"window={r['window_steps']:.2f}steps")
+
+    rows = []
+    requests = 6 if fast else 10
+    for pool in ("CXL", "RDMA"):
+        _, plain = measured_engine(pool, speculate=False, requests=requests)
+        eng, spec = measured_engine(pool, speculate=True, requests=requests)
+        s = eng.store.stats()
+        rows.append([pool,
+                     round(plain.tokens_per_s_emulated, 1),
+                     round(spec.tokens_per_s_emulated, 1),
+                     round(spec.tokens_per_s_emulated
+                           / max(plain.tokens_per_s_emulated, 1e-9), 3),
+                     round(spec.acceptance_rate, 3),
+                     round(s.spec_window_steps, 3),
+                     round(s.wasted_prefetch_rate, 3)])
+        emit(f"speculation/engine_{pool}",
+             1e6 / max(spec.tokens_per_s_emulated, 1e-9),
+             f"plain={1e6 / max(plain.tokens_per_s_emulated, 1e-9):.1f}"
+             f"us/tok accept={spec.acceptance_rate:.2f} "
+             f"window={s.spec_window_steps:.2f}steps")
+    write_csv("speculation_engine",
+              ["pool", "plain_tok_s_emu", "spec_tok_s_emu", "speedup",
+               "acceptance", "window_steps", "wasted_rate"], rows)
+
+
+if __name__ == "__main__":
+    run()

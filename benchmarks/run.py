@@ -17,6 +17,7 @@ BENCHES = [
     ("feasibility", "Table 1 / §3.2: feasibility case study"),
     ("throughput", "Table 2: E2E serving throughput by pool tier"),
     ("scalability", "Table 3: DP x nnode scaling"),
+    ("speculation", "§3.2 deep lookahead: acceptance x tier speculation"),
     ("cost", "Tables 4/5: capex comparison"),
     ("kernels", "Kernel microbenches (gather / gated fuse)"),
 ]

@@ -8,6 +8,8 @@ prefetch-window stalls — comes from the tiered EngramStore subsystem
     PYTHONPATH=src python examples/serve_pooled.py [--requests 8]
     # paper §6 rescue, end-to-end: RDMA backing tier + DRAM hot-row cache
     PYTHONPATH=src python examples/serve_pooled.py --pool RDMA --cache-rows 100000
+    # §3.2 deep lookahead: speculative decoding widens the prefetch window
+    PYTHONPATH=src python examples/serve_pooled.py --pool RDMA --speculate
 """
 import argparse
 import sys
@@ -20,19 +22,42 @@ from repro.launch.serve import main as serve_main
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="default 8 (12 with --speculate: enough replays "
+                         "of the hot prompt to show the widened window)")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--pool", default=None,
                     choices=["DRAM", "CXL", "RDMA", "RDMA-agg", "HBM"])
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="LRU hot-row cache rows in front of --pool")
+    ap.add_argument("--admission", default="lru",
+                    choices=["lru", "tinylfu"],
+                    help="cache admission policy (tinylfu = scan-resistant)")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative decoding (n-gram proposer)")
     args = ap.parse_args()
+    if args.admission != "lru" and not args.cache_rows:
+        ap.error("--admission needs --cache-rows (the policy gates inserts "
+                 "into the hot-row cache)")
+    requests = args.requests if args.requests is not None \
+        else (12 if args.speculate else 8)
     argv = ["--arch", "deepseek-7b", "--reduced",
-            "--requests", str(args.requests),
+            "--requests", str(requests),
             "--max-new", str(args.max_new),
-            "--max-batch", "4", "--max-len", "64"]
+            "--max-len", "64"]
+    if args.speculate:
+        # repeat traffic from a hot prompt: replayed greedy continuations
+        # are what the n-gram proposer accepts on (a unique-random
+        # workload would honestly show ~0% acceptance), and a narrow
+        # batch keeps replays *behind* the first request instead of in
+        # cold lockstep beside it
+        argv += ["--speculate", "--prompt-pool", "1", "--max-batch", "2"]
+    else:
+        argv += ["--max-batch", "4"]
     if args.pool:
         argv += ["--pool", args.pool, "--cache-rows", str(args.cache_rows)]
+        if args.cache_rows:
+            argv += ["--admission", args.admission]
     else:
         if args.cache_rows:
             ap.error("--cache-rows needs --pool (the cache fronts a "

@@ -25,16 +25,46 @@ class StoreConfig:
     """Tiered-store knobs (pool/store.py): the cache/prefetch front-end the
     paper's §6 discussion proposes in front of a slow backing tier.
 
-    ``cache_rows=0`` disables the hot-row cache. ``prefetch_depth`` is the
-    scheduler pipeline depth: 0 = synchronous fetch at the Engram layer
-    (window 0), 1 = the paper's prefetch (issue at step start, window =
-    k·t_exec), >=2 adds (depth-1) full decode steps of lookahead credit
-    (legal only when future tokens are already known, e.g. speculative or
-    multi-token heads — an emulation knob, off by default).
+    ``cache_rows=0`` disables the hot-row cache. ``admission`` selects the
+    cache admission policy: ``"lru"`` (default, admit everything) or
+    ``"tinylfu"`` (frequency-aware: a new row displaces the LRU victim only
+    if a count-min sketch estimates it hotter — scan-resistant).
+
+    ``prefetch_depth`` is the scheduler pipeline depth: 0 = synchronous
+    fetch at the Engram layer (window 0), 1 = the paper's prefetch (issue
+    at step start, window = k·t_exec). Deeper lookahead is no longer a
+    config knob: windows beyond one step come from *real* speculative
+    decoding (``SpecConfig``), where the scheduler derives per-position
+    credit from the actually proposed (and later verified) tokens.
     """
     cache_rows: int = 0                    # LRU hot-row cache capacity (rows)
     cache_tier: str = "DRAM"               # tier serving cache hits
-    prefetch_depth: int = 1                # scheduler pipeline depth
+    prefetch_depth: int = 1                # scheduler pipeline depth (0 | 1)
+    admission: str = "lru"                 # cache admission: lru | tinylfu
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Speculative decoding (spec/): turns the Engram prefetch window into
+    real multi-step lookahead. Each decode wave proposes ``max_draft``
+    tokens per live slot, prefetches the whole speculated window through
+    the store, verifies the block in one batched pass, and rolls back the
+    rejected tail (serving/slots.py state surgery).
+
+    ``proposer``: ``"ngram"`` (suffix-cache proposer, no extra weights) or
+    ``"draft"`` (small draft model reusing ``build_decode_step`` on a
+    shrunken config). ``verify_overhead`` is the emulated extra cost per
+    speculated token of the fused verify pass relative to a single decode
+    step (decode is memory-bound, so a k-token verify costs ~one step plus
+    a small compute term).
+    """
+    enabled: bool = True
+    proposer: str = "ngram"                # ngram | draft
+    max_draft: int = 3                     # speculated tokens per wave (k)
+    ngram_order: int = 4                   # max suffix length + 1 for ngram
+    draft_layers: int = 1                  # layers kept by the draft model
+    draft_context: int = 16                # draft prefill context (bucketed)
+    verify_overhead: float = 0.05          # emulated verify cost / extra token
 
 
 @dataclass(frozen=True)
@@ -172,6 +202,9 @@ class ModelConfig:
 
     # the paper's technique
     engram: Optional[EngramConfig] = None
+
+    # speculative decoding (spec/): drives real multi-step Engram lookahead
+    spec: Optional[SpecConfig] = None
 
     # numerics
     dtype: str = "bfloat16"              # activation/param dtype for dry-run

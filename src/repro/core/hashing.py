@@ -76,6 +76,17 @@ def decode_engram_indices(ecfg: EngramConfig, last_tokens: jax.Array,
     return idx[:, -1:, :]
 
 
+def block_engram_indices(ecfg: EngramConfig, last_tokens: jax.Array,
+                         block: jax.Array) -> jax.Array:
+    """Indices for a speculated block. last_tokens (B, max_order-1) history
+    (oldest first), block (B, m) = [pending token, drafts...]. Returns
+    (B, m, n_tables) — the whole window's indices from token IDs alone,
+    which is what lets the prefetch cover every speculated position."""
+    ctx = jnp.concatenate([last_tokens, block], axis=1)
+    idx = engram_indices(ecfg, ctx)                       # (B, o-1+m, T)
+    return idx[:, -block.shape[1]:, :]
+
+
 def update_last_tokens(last_tokens: jax.Array, new_token: jax.Array) -> jax.Array:
     """Roll the (B, max_order-1) history window."""
     if last_tokens.shape[1] == 0:

@@ -15,7 +15,7 @@ import time
 
 import numpy as np
 
-from ..configs.base import StoreConfig, get_config
+from ..configs.base import SpecConfig, StoreConfig, get_config
 from ..models.model import init_params
 from ..models.transformer import RunFlags
 from ..serving import Engine
@@ -23,12 +23,12 @@ from .train import reduced_config
 
 
 def with_store(cfg, *, cache_rows: int = 0, cache_tier: str = "DRAM",
-               prefetch_depth: int = 1):
+               prefetch_depth: int = 1, admission: str = "lru"):
     """Return ``cfg`` with tiered-store knobs on its EngramConfig."""
     if cfg.engram is None:
         return cfg
     scfg = StoreConfig(cache_rows=cache_rows, cache_tier=cache_tier,
-                       prefetch_depth=prefetch_depth)
+                       prefetch_depth=prefetch_depth, admission=admission)
     return dataclasses.replace(
         cfg, engram=dataclasses.replace(cfg.engram, store=scfg))
 
@@ -36,30 +36,36 @@ def with_store(cfg, *, cache_rows: int = 0, cache_tier: str = "DRAM",
 def run_once(cfg, *, requests: int, max_new: int, pool, params=None,
              max_batch: int = 8, max_len: int = 256, seed: int = 0,
              warmup: bool = False, emulate_step_s=None, cache_rows: int = 0,
-             zipf_alpha: float = 0.0):
+             zipf_alpha: float = 0.0, admission: str = "lru",
+             spec: SpecConfig = None, prompt_pool: int = 0):
     # deployment default: the §Perf-validated decode path (bf16 scores —
     # numerically equivalent per tests/test_perf_flags.py, ~7x less decode
     # cache traffic). The dry-run baselines keep RunFlags() defaults.
     flags = RunFlags(attn_bf16_scores=True)
     if cache_rows:
-        cfg = with_store(cfg, cache_rows=cache_rows)
+        cfg = with_store(cfg, cache_rows=cache_rows, admission=admission)
     eng = Engine(cfg, params=params, flags=flags, max_batch=max_batch,
                  max_len=max_len, pool=pool, seed=seed,
-                 emulate_step_s=emulate_step_s)
+                 emulate_step_s=emulate_step_s, spec=spec)
     if warmup:
         eng.warmup()
     rng = np.random.RandomState(seed)
     for r in range(requests):
-        plen = int(rng.randint(4, 24))
+        # prompt repetition model: a pool of N hot prompts means requests
+        # replay earlier ones — greedy continuations repeat verbatim, the
+        # regime where both the hot-row cache and speculation pay off
+        pr = int(rng.randint(prompt_pool)) if prompt_pool else r
+        plen = 4 + (pr * 7) % 20
         if zipf_alpha:
             # Zipf-skewed token stream (the paper's n-gram reuse model) —
             # hot prompts repeat, which is what a hot-row cache feeds on
             from ..pool.cache import zipf_keys
             toks = 1 + zipf_keys(plen, cfg.vocab_size - 1,
-                                 alpha=zipf_alpha, seed=seed * 1000 + r)
+                                 alpha=zipf_alpha, seed=seed * 1000 + pr)
             eng.submit([int(t) for t in toks], max_new=max_new)
         else:
-            eng.submit(list(rng.randint(1, cfg.vocab_size, size=plen)),
+            prng = np.random.RandomState(seed * 1000 + pr)
+            eng.submit(list(prng.randint(1, cfg.vocab_size, size=plen)),
                        max_new=max_new)
     stats = eng.run()
     return eng, stats
@@ -79,20 +85,55 @@ def main(argv=None) -> int:
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="LRU hot-row cache capacity in front of the pool "
                          "tier (0 = off; paper §6 rescue)")
+    ap.add_argument("--admission", default="lru",
+                    choices=["lru", "tinylfu"],
+                    help="hot-row cache admission policy")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative decoding: drafts widen the Engram "
+                         "prefetch window to multiple real decode steps")
+    ap.add_argument("--spec-proposer", default="ngram",
+                    choices=["ngram", "draft"])
+    ap.add_argument("--max-draft", type=int, default=3,
+                    help="speculated tokens per wave (k)")
+    ap.add_argument("--zipf-alpha", type=float, default=0.0,
+                    help="Zipf-skewed prompts (the paper's n-gram reuse "
+                         "model); feeds both the hot-row cache and the "
+                         "n-gram proposer")
+    ap.add_argument("--prompt-pool", type=int, default=0,
+                    help="draw prompts from a pool of N distinct prompts "
+                         "(repeat traffic: the n-gram proposer's and the "
+                         "hot-row cache's steady state); 0 = all unique")
     ap.add_argument("--compare", action="store_true",
                     help="run baseline / +Engram(DRAM) / +Engram(CXL)")
     args = ap.parse_args(argv)
+    if args.admission != "lru" and not args.cache_rows:
+        ap.error("--admission needs --cache-rows > 0 (the policy gates "
+                 "inserts into the hot-row cache)")
+    if args.compare and (args.speculate or args.cache_rows
+                         or args.zipf_alpha or args.prompt_pool):
+        ap.error("--compare runs fixed Table 2 variants; it does not "
+                 "honour --speculate/--cache-rows/--zipf-alpha/"
+                 "--prompt-pool — run those as single-pool invocations")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    spec = SpecConfig(proposer=args.spec_proposer,
+                      max_draft=args.max_draft) if args.speculate else None
     if not args.compare:
         eng, stats = run_once(cfg, requests=args.requests,
                               max_new=args.max_new,
                               pool=args.pool, max_batch=args.max_batch,
                               max_len=args.max_len,
-                              cache_rows=args.cache_rows)
+                              cache_rows=args.cache_rows,
+                              admission=args.admission, spec=spec,
+                              zipf_alpha=args.zipf_alpha,
+                              prompt_pool=args.prompt_pool)
         print(f"pool={args.pool or 'local'}: {stats.generated_tokens} tokens "
               f"in {stats.wall_s:.2f}s = {stats.tokens_per_s:.1f} tok/s "
               f"(stall {stats.stall_s * 1e3:.1f} ms)")
+        if args.speculate:
+            print(f"speculate: acceptance={stats.acceptance_rate:.3f} "
+                  f"({stats.accepted_tokens}/{stats.proposed_tokens} drafts, "
+                  f"{stats.spec_waves} verify waves)")
         if eng.store is not None and args.pool:
             s = eng.store.stats()
             print(f"store[{s.tier}]: {s.segments} segments, "
@@ -100,6 +141,10 @@ def main(argv=None) -> int:
                   f"(cache={s.cache_rows} rows @ {s.cache_tier}), "
                   f"stall/wave={s.stall_s_per_wave * 1e6:.1f} us, "
                   f"hidden {s.hidden_waves}/{s.waves} waves")
+            if s.spec_waves:
+                print(f"spec-prefetch: window={s.spec_window_steps:.2f} "
+                      f"decode steps (measured), "
+                      f"wasted={s.wasted_prefetch_rate:.3f} of segments")
         return 0
 
     # Table 2 shape: baseline (no engram) vs +Engram(DRAM) vs +Engram(CXL)

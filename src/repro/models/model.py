@@ -246,6 +246,31 @@ def build_prefill_step(cfg: ModelConfig, flags: RunFlags, max_len: int = 0):
     return prefill_step
 
 
+def _decode_one(cfg: ModelConfig, flags: RunFlags, params, state, token,
+                rows=None):
+    """One decode step: (state, token (B,)) -> (logits (B,V), new_state).
+    Shared by the single-token step and the multi-token verify step so the
+    two paths are numerically identical."""
+    batch = {"tokens": token[:, None]}
+    positions = state["positions"]
+    eng_layers = cfg.engram_layers()
+    if eng_layers and "engram" in params and rows is None:
+        idx = decode_engram_indices(cfg.engram, state["last_tokens"],
+                                    token)
+        rows = _engram_rows_all_layers(cfg, flags, params, idx)
+    h, new_caches, _ = forward(cfg, flags, params, batch, "decode",
+                               positions=positions, caches=state["caches"],
+                               engram_rows=rows)
+    logits = head_logits(_head_params(cfg, params), h[:, 0],
+                         cfg.final_logit_softcap, cfg.tie_embeddings)
+    new_state = {
+        "caches": new_caches,
+        "positions": positions + 1,
+        "last_tokens": update_last_tokens(state["last_tokens"], token),
+    }
+    return logits, new_state
+
+
 def build_decode_step(cfg: ModelConfig, flags: RunFlags,
                       external_rows: bool = False):
     """(params, state, token (B,) [, rows]) -> (logits (B,V), new_state).
@@ -255,31 +280,52 @@ def build_decode_step(cfg: ModelConfig, flags: RunFlags,
     before the decode step is enqueued, per the paper's §4.3)."""
     assert not cfg.is_encoder
 
-    def decode_step(params, state, token, rows=None):
-        B = token.shape[0]
-        batch = {"tokens": token[:, None]}
-        positions = state["positions"]
-        eng_layers = cfg.engram_layers()
-        if eng_layers and "engram" in params and rows is None:
-            idx = decode_engram_indices(cfg.engram, state["last_tokens"],
-                                        token)
-            rows = _engram_rows_all_layers(cfg, flags, params, idx)
-        h, new_caches, _ = forward(cfg, flags, params, batch, "decode",
-                                   positions=positions, caches=state["caches"],
-                                   engram_rows=rows)
-        logits = head_logits(_head_params(cfg, params), h[:, 0],
-                             cfg.final_logit_softcap, cfg.tie_embeddings)
-        new_state = {
-            "caches": new_caches,
-            "positions": positions + 1,
-            "last_tokens": update_last_tokens(state["last_tokens"], token),
-        }
-        return logits, new_state
+    if external_rows:
+        return lambda params, state, token, rows: _decode_one(
+            cfg, flags, params, state, token, rows)
+    return lambda params, state, token: _decode_one(cfg, flags, params,
+                                                    state, token)
+
+
+def build_multitoken_decode(cfg: ModelConfig, flags: RunFlags,
+                            external_rows: bool = False):
+    """Multi-token verify step for speculative decoding.
+
+    (params, state, block (B,m) [, rows]) ->
+        (logits (B,m,V), final_state, snapshots)
+
+    Unrolls m single-token decode steps (m is static at trace time) over
+    the block — position s attends the block's own earlier positions
+    through the in-place KV writes, exactly as sequential decode would —
+    and records a ``snapshot_recurrent`` of the state after every step so
+    the caller can roll rejected positions back per slot
+    (serving/slots.rollback_state).
+
+    ``external_rows=True``: per-layer rows for the WHOLE block,
+    (B, m, orders*emb) each — the engine's speculated-window prefetch.
+    """
+    assert not cfg.is_encoder
+    from ..serving.slots import snapshot_recurrent
+
+    def multitoken_step(params, state, block, rows=None):
+        m = block.shape[1]
+        snaps = [snapshot_recurrent(state)]
+        logits_all = []
+        st = state
+        for s in range(m):
+            rows_s = None
+            if rows is not None:
+                rows_s = [r[:, s:s + 1] for r in rows]
+            logits, st = _decode_one(cfg, flags, params, st, block[:, s],
+                                     rows_s)
+            logits_all.append(logits)
+            snaps.append(snapshot_recurrent(st))
+        return jnp.stack(logits_all, axis=1), st, snaps
 
     if external_rows:
-        return lambda params, state, token, rows: decode_step(
-            params, state, token, rows)
-    return lambda params, state, token: decode_step(params, state, token)
+        return lambda params, state, block, rows: multitoken_step(
+            params, state, block, rows)
+    return lambda params, state, block: multitoken_step(params, state, block)
 
 
 def build_encoder_step(cfg: ModelConfig, flags: RunFlags):

@@ -9,5 +9,6 @@ from .cost import CostRow, breakeven_nodes, cost_table, local_cost, pool_cost
 from .store import (CachedStore, EngramStore, LocalStore, PrefetchHandle,
                     StoreStats, STRATEGY_TIERS, TableFetcher, TierStore,
                     make_store, segment_keys, store_for_strategy)
-from .cache import LRUHotRowCache, zipf_keys
-from .scheduler import PrefetchScheduler, WaveReport
+from .cache import (FrequencySketch, LRUHotRowCache, TinyLFUAdmission,
+                    zipf_keys)
+from .scheduler import PrefetchScheduler, SpecWaveReport, WaveReport

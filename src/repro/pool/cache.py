@@ -38,6 +38,80 @@ class WaveAccess:
         return self.hits / n if n else 0.0
 
 
+class FrequencySketch:
+    """Count-min sketch with saturating 4-bit-style counters and periodic
+    halving (the TinyLFU aging scheme): estimates how often a key has been
+    seen without storing per-key state."""
+
+    def __init__(self, width: int = 1 << 15, depth: int = 4,
+                 max_count: int = 15, sample_factor: int = 16):
+        assert width & (width - 1) == 0, "width must be a power of two"
+        self.width = width
+        self.depth = depth
+        self.max_count = max_count
+        self._table = np.zeros((depth, width), np.uint8)
+        self._seeds = np.asarray(
+            [0x9E3779B97F4A7C15 * (i + 1) & 0xFFFFFFFFFFFFFFFF
+             for i in range(depth)], np.uint64)
+        self._ops = 0
+        self._sample_limit = sample_factor * width
+
+    def _slots(self, keys: np.ndarray) -> np.ndarray:
+        """(depth, n) table columns for each key."""
+        k = keys.astype(np.uint64)[None, :] ^ self._seeds[:, None]
+        k ^= k >> np.uint64(33)
+        k *= np.uint64(0xFF51AFD7ED558CCD)
+        k ^= k >> np.uint64(33)
+        return (k & np.uint64(self.width - 1)).astype(np.int64)
+
+    def observe(self, keys) -> None:
+        keys = np.asarray(keys, np.int64)
+        if keys.size == 0:
+            return
+        slots = self._slots(keys)
+        for d in range(self.depth):
+            # np.add.at would double-count colliding keys in one wave toward
+            # saturation; per-wave uniqueness is close enough at this scale
+            cols, counts = np.unique(slots[d], return_counts=True)
+            row = self._table[d]
+            row[cols] = np.minimum(row[cols].astype(np.int64) + counts,
+                                   self.max_count).astype(np.uint8)
+        self._ops += int(keys.size)
+        if self._ops >= self._sample_limit:         # aging: halve everything
+            self._table >>= 1
+            self._ops //= 2
+
+    def estimate(self, keys) -> np.ndarray:
+        keys = np.asarray(keys, np.int64)
+        if keys.size == 0:
+            return np.zeros(0, np.int64)
+        slots = self._slots(keys)
+        est = self._table[0][slots[0]].astype(np.int64)
+        for d in range(1, self.depth):
+            est = np.minimum(est, self._table[d][slots[d]])
+        return est
+
+
+class TinyLFUAdmission:
+    """Frequency-aware admission (TinyLFU): a missed key is admitted only
+    if the sketch estimates it at least as hot as the LRU victim it would
+    displace. One-shot scans then cannot flush a hot working set."""
+
+    def __init__(self, sketch: FrequencySketch | None = None):
+        self.sketch = sketch if sketch is not None else FrequencySketch()
+        self.rejected = 0
+
+    def observe(self, keys) -> None:
+        self.sketch.observe(keys)
+
+    def admit(self, candidate: int, victim: int) -> bool:
+        cand, vic = self.sketch.estimate([candidate, victim])
+        ok = bool(cand >= vic)
+        if not ok:
+            self.rejected += 1
+        return ok
+
+
 class LRUHotRowCache:
     """Fixed-capacity LRU over opaque int row keys.
 
@@ -45,11 +119,17 @@ class LRUHotRowCache:
     unique key as hit/miss against the current state, move hits to MRU,
     insert misses (evicting LRU rows beyond capacity), and accumulate the
     running hit/miss totals that ``hit_rate`` reports.
+
+    ``admission`` (optional, e.g. ``TinyLFUAdmission``) gates inserts once
+    the cache is full: a miss is always *counted* (the row was fetched from
+    the backing tier either way) but only *cached* if the policy prefers it
+    over the LRU victim.
     """
 
-    def __init__(self, capacity_rows: int):
+    def __init__(self, capacity_rows: int, admission=None):
         assert capacity_rows > 0, capacity_rows
         self.capacity_rows = int(capacity_rows)
+        self.admission = admission
         self._rows: OrderedDict[int, None] = OrderedDict()
         self.total_hits = 0
         self.total_misses = 0
@@ -65,12 +145,16 @@ class LRUHotRowCache:
     def access_wave(self, keys) -> WaveAccess:
         uniq = np.unique(np.asarray(keys, dtype=np.int64))
         rows = self._rows
+        adm = self.admission
+        if adm is not None:
+            adm.observe(uniq)                       # sketch sees all traffic
         hits = 0
         for k in uniq.tolist():
             if k in rows:
                 rows.move_to_end(k)
                 hits += 1
-            else:
+            elif adm is None or len(rows) < self.capacity_rows \
+                    or adm.admit(k, next(iter(rows))):
                 rows[k] = None
                 if len(rows) > self.capacity_rows:
                     rows.popitem(last=False)

@@ -14,10 +14,18 @@ its own stall formula. Pipeline depth (``StoreConfig.prefetch_depth``):
 
   depth 0   synchronous: fetch issued at the Engram layer itself, window 0
             (what serving without prefetch would pay);
-  depth 1   the paper's prefetch: issue at step start, window = k·t_exec;
-  depth d>1 (d-1) extra full decode steps of lookahead credit — only legal
-            when future tokens are already known (speculative decoding,
-            multi-token heads); an emulation knob, default off.
+  depth 1   the paper's prefetch: issue at step start, window = k·t_exec.
+
+Deeper windows are NOT a knob: they come from real speculative decoding
+(``speculative_wave``). A speculated wave knows the token IDs of every
+position in its block at wave start, so position j's fetch is issued j
+token-slots before consumption: its window is ``k·t_exec + j·t_tok``
+(``t_tok`` = the verify pass's per-position slice). After verification the
+wave is charged through ``charge_spec``: only the positions that actually
+executed and survived (the accepted prefix plus the correction token) can
+stall; the rejected tail's segments are counted as *wasted* prefetch, and
+the correction token's replacement rows are simply the next wave's
+position 0 — the narrow-window fetch that pays for mis-speculation.
 
 One wave = one handle per Engram layer (the paper's N_eng independent
 per-layer fetches; each layer owns its tables, so each layer's key stream
@@ -32,6 +40,37 @@ from ..configs.base import EngramConfig
 from .store import EngramStore, PrefetchHandle
 
 
+class _SharedFetch:
+    """Memoize a fused fetch (one call materializing every layer's rows)
+    so each per-layer handle can gather its own slice exactly once."""
+
+    def __init__(self, fetch: Callable[[], Any]):
+        self._fetch = fetch
+        self._rows = None
+        self._done = False
+
+    def layer(self, i: int) -> Callable[[], Any]:
+        def get():
+            if not self._done:
+                self._rows = self._fetch()
+                self._done = True
+            return self._rows[i]
+        return get
+
+
+def _per_layer_fetches(fetch, n_layers: int):
+    """Normalize ``fetch`` into one callable per Engram layer. Accepts a
+    list of per-layer callables, or a single fused callable returning the
+    per-layer rows list (the engine's jitted retrieval)."""
+    if fetch is None:
+        return [None] * n_layers
+    if isinstance(fetch, (list, tuple)):
+        assert len(fetch) == n_layers, (len(fetch), n_layers)
+        return list(fetch)
+    shared = _SharedFetch(fetch)
+    return [shared.layer(i) for i in range(n_layers)]
+
+
 @dataclasses.dataclass
 class WaveReport:
     """Outcome of scheduling one retrieval wave."""
@@ -40,9 +79,33 @@ class WaveReport:
     hidden: bool                       # every fetch fit its window
     handles: list[PrefetchHandle]
 
-    def gather(self, store: EngramStore) -> Any:
-        """Materialize the wave's rows through the store."""
-        return store.gather(self.handles[0])
+    def gather(self, store: EngramStore) -> list:
+        """Materialize the wave's rows through the store — one gather per
+        Engram layer (every handle, not just the first)."""
+        return [store.gather(h) for h in self.handles]
+
+
+@dataclasses.dataclass
+class SpecWaveReport:
+    """An issued (not yet charged) speculative wave: per-position,
+    per-layer prefetches for the whole proposed block. ``charge_spec``
+    settles it once verification has decided the accepted prefix."""
+    handles: list[list[PrefetchHandle]]    # [position][layer]
+    overshoot_s: list[float]               # per position, summed over layers
+    n_segments: list[int]                  # per position
+    latency_s: float                       # slowest single fetch
+    step_s: float                          # verify-pass latency estimate
+    layer_frac: float                      # first Engram layer / n_layers
+    charged: bool = False
+
+    @property
+    def n_positions(self) -> int:
+        return len(self.handles)
+
+    def gather(self, store: EngramStore) -> list:
+        """Per-position, per-layer rows."""
+        return [[store.gather(h) for h in per_layer]
+                for per_layer in self.handles]
 
 
 class PrefetchScheduler:
@@ -59,34 +122,39 @@ class PrefetchScheduler:
         self.n_layers = max(int(n_layers), 1)
         depth = ecfg.store.prefetch_depth if prefetch_depth is None \
             else prefetch_depth
-        assert depth >= 0, depth
+        assert depth in (0, 1), \
+            f"prefetch_depth must be 0 or 1 (got {depth}); windows beyond " \
+            "one step come from real speculation (speculative_wave), not " \
+            "a config knob"
         self.depth = depth
 
     def window_s(self, layer_k: int, step_latency_s: float) -> float:
         """Prefetch window for Engram layer ``layer_k`` at the given step
-        latency, including any pipeline-depth lookahead credit."""
+        latency: the compute of layers 0..k-1 the fetch can hide in."""
         if self.depth == 0:
             return 0.0
-        t_exec = step_latency_s / self.n_layers
-        return layer_k * t_exec + (self.depth - 1) * step_latency_s
+        return layer_k * step_latency_s / self.n_layers
 
     def step(self, keys_per_layer, step_latency_s: float,
-             fetch: Optional[Callable[[], Any]] = None) -> WaveReport:
+             fetch=None) -> WaveReport:
         """Schedule one wave.
 
         ``keys_per_layer``: one packed-key array per Engram layer (measured
         mode), or a bare token count applied to every layer (analytic
-        mode). ``fetch`` materializes the wave's rows on ``gather``.
+        mode). ``fetch`` materializes the wave's rows on ``gather`` —
+        either one callable per layer or a single fused callable returning
+        the per-layer rows list.
         """
         if not isinstance(keys_per_layer, (list, tuple)):
             keys_per_layer = [keys_per_layer] * len(self.layers)
         assert len(keys_per_layer) == len(self.layers), \
             (len(keys_per_layer), self.layers)
+        fetches = _per_layer_fetches(fetch, len(self.layers))
         stall = 0.0
         lat_max = 0.0
         handles = []
         for i, (k, keys) in enumerate(zip(self.layers, keys_per_layer)):
-            h = self.store.prefetch(keys, fetch=fetch if i == 0 else None)
+            h = self.store.prefetch(keys, fetch=fetches[i])
             handles.append(h)
             stall += max(0.0, h.latency_s - self.window_s(k, step_latency_s))
             lat_max = max(lat_max, h.latency_s)
@@ -94,3 +162,105 @@ class PrefetchScheduler:
         self.store.note_wave(stall, hidden)
         return WaveReport(stall_s=stall, latency_s=lat_max, hidden=hidden,
                           handles=handles)
+
+    # ------------------------------------------------------- speculation
+
+    def speculative_wave(self, keys_by_pos, step_latency_s: float,
+                         fetch=None) -> SpecWaveReport:
+        """Issue the prefetch for a whole speculated block.
+
+        ``keys_by_pos``: one ``keys_per_layer`` entry per block position
+        (position 0 = the pending token, 1..k = proposed drafts). Position
+        j's fetch is issued at wave start but consumed j positions into
+        the verify pass, so its window gains ``j · t_tok`` of real
+        lookahead credit on top of the per-layer window.
+
+        ``fetch``: either one entry per position (each following
+        ``step()``'s per-position contract: a per-layer list or a fused
+        callable for that position), or a single fused callable returning
+        the whole block's ``rows[position][layer]`` nest.
+
+        Stats are NOT charged here — verification hasn't happened yet.
+        Call ``charge_spec(report, n_keep)`` afterwards.
+        """
+        m = len(keys_by_pos)
+        assert m >= 1, "speculative wave needs at least the pending token"
+        if fetch is None:
+            fetch_by_pos = [None] * m
+        elif isinstance(fetch, (list, tuple)):
+            assert len(fetch) == m, (len(fetch), m)
+            fetch_by_pos = list(fetch)
+        elif callable(fetch):
+            shared = _SharedFetch(fetch)         # rows[position][layer]
+            fetch_by_pos = [shared.layer(j) for j in range(m)]
+        else:
+            raise TypeError(f"bad speculative fetch: {type(fetch)!r}")
+        t_tok = step_latency_s / m
+        handles: list[list[PrefetchHandle]] = []
+        overshoot: list[float] = []
+        n_segments: list[int] = []
+        lat_max = 0.0
+        for j, keys_per_layer in enumerate(keys_by_pos):
+            if not isinstance(keys_per_layer, (list, tuple)):
+                keys_per_layer = [keys_per_layer] * len(self.layers)
+            assert len(keys_per_layer) == len(self.layers)
+            fetches = _per_layer_fetches(fetch_by_pos[j], len(self.layers))
+            per_layer = []
+            over = 0.0
+            nseg = 0
+            for i, (k, keys) in enumerate(zip(self.layers, keys_per_layer)):
+                h = self.store.prefetch(keys, fetch=fetches[i])
+                per_layer.append(h)
+                window = self.window_s(k, step_latency_s) + j * t_tok
+                over += max(0.0, h.latency_s - window)
+                lat_max = max(lat_max, h.latency_s)
+                nseg += h.n_segments
+            handles.append(per_layer)
+            overshoot.append(over)
+            n_segments.append(nseg)
+        return SpecWaveReport(handles=handles, overshoot_s=overshoot,
+                              n_segments=n_segments, latency_s=lat_max,
+                              step_s=step_latency_s,
+                              layer_frac=min(self.layers) / self.n_layers)
+
+    def charge_spec(self, report: SpecWaveReport, n_keep: int,
+                    tokens_emitted: Optional[int] = None) -> float:
+        """Settle a speculative wave after verification.
+
+        ``n_keep``: positions that executed and survived (accepted drafts
+        + 1, the batch max). Only those positions can stall the wave — the
+        rejected tail never reaches its fuse, its rows are charged as
+        wasted prefetch instead, and its *replacement* (the correction
+        token) is refetched by the next wave's position 0. All positions'
+        fetches were issued concurrently at wave start with staggered
+        consumption points, so the wave's extra wait is the *worst*
+        surviving overshoot, not their sum: a stall absorbed at position i
+        also buys positions j > i more arrival time.
+
+        ``tokens_emitted``: the wave's actual emitted-token count summed
+        over slots (per-slot acceptance varies; ``n_keep`` is the batch
+        max). Defaults to ``n_keep`` for single-slot/analytic callers.
+
+        Returns the stall and records the wave's measured window depth in
+        emitted-token decode steps: the deepest accepted position's lead
+        time (j·t_tok + first-layer window) over the realized per-token
+        step time (step_s / n_keep).
+        """
+        assert not report.charged, "speculative wave charged twice"
+        report.charged = True
+        m = report.n_positions
+        n_keep = max(1, min(int(n_keep), m))
+        stall = max(report.overshoot_s[:n_keep])
+        accepted_seg = sum(report.n_segments[:n_keep])
+        wasted_seg = sum(report.n_segments[n_keep:])
+        # measured window depth, in emitted-token steps (see StoreStats)
+        window_wall = (report.layer_frac * report.step_s
+                       + (n_keep - 1) * report.step_s / m)
+        t_emit = report.step_s / n_keep
+        depth_steps = window_wall / t_emit if t_emit > 0 else 0.0
+        tokens = n_keep if tokens_emitted is None else int(tokens_emitted)
+        self.store.note_spec_wave(stall, stall == 0.0, tokens=tokens,
+                                  depth_steps=depth_steps,
+                                  accepted_segments=accepted_seg,
+                                  wasted_segments=wasted_seg)
+        return stall

@@ -45,7 +45,7 @@ from typing import Any, Callable, Optional, Protocol, runtime_checkable
 import numpy as np
 
 from ..configs.base import EngramConfig
-from .cache import LRUHotRowCache, WaveAccess
+from .cache import LRUHotRowCache, TinyLFUAdmission, WaveAccess
 from .tiers import TIERS, TierSpec
 
 
@@ -102,6 +102,12 @@ class StoreStats:
     hidden_waves: int = 0              # waves fully inside the window
     stall_s: float = 0.0               # accumulated overshoot
     retrieval_s: float = 0.0           # accumulated modelled latency
+    # ---- speculative prefetch accounting (spec/ + scheduler) ------------
+    spec_waves: int = 0                # speculative (multi-token) waves
+    spec_tokens: int = 0               # tokens emitted by speculative waves
+    accepted_segments: int = 0         # prefetched segments that were used
+    wasted_segments: int = 0           # prefetched for a rejected position
+    spec_depth_sum: float = 0.0        # accumulated measured window depth
 
     @property
     def hit_rate(self) -> float:
@@ -111,6 +117,21 @@ class StoreStats:
     @property
     def stall_s_per_wave(self) -> float:
         return self.stall_s / self.waves if self.waves else 0.0
+
+    @property
+    def spec_window_steps(self) -> float:
+        """Measured prefetch window depth, in emitted-token decode steps:
+        the lead time of the deepest *accepted* position between prefetch
+        issue and consumption, averaged over speculative waves. Driven by
+        verified acceptance, not a config knob — all-rejected waves
+        collapse it below one step."""
+        return self.spec_depth_sum / self.spec_waves if self.spec_waves \
+            else 0.0
+
+    @property
+    def wasted_prefetch_rate(self) -> float:
+        n = self.accepted_segments + self.wasted_segments
+        return self.wasted_segments / n if n else 0.0
 
 
 @runtime_checkable
@@ -187,6 +208,21 @@ class _StoreBase:
         s.waves += 1
         s.stall_s += stall_s
         s.hidden_waves += int(hidden)
+
+    def note_spec_wave(self, stall_s: float, hidden: bool, tokens: int,
+                       depth_steps: float, accepted_segments: int,
+                       wasted_segments: int) -> None:
+        """Account one verified speculative wave: ``tokens`` were emitted,
+        the wave's deepest accepted position enjoyed ``depth_steps`` of
+        measured lookahead, and the prefetched segments split into used
+        vs. mis-speculated (fetched for a rejected draft)."""
+        self.note_wave(stall_s, hidden)
+        s = self._stats
+        s.spec_waves += 1
+        s.spec_tokens += int(tokens)
+        s.spec_depth_sum += float(depth_steps)
+        s.accepted_segments += int(accepted_segments)
+        s.wasted_segments += int(wasted_segments)
 
     def stats(self) -> StoreStats:
         return self._stats
@@ -310,14 +346,18 @@ STRATEGY_TIERS: dict[str, Optional[str]] = {
 def make_store(ecfg: EngramConfig, tier: TierSpec | str | None,
                store_cfg=None) -> EngramStore:
     """Build the store for a backing tier, honouring ``ecfg.store`` knobs
-    (cache capacity / cache tier). ``tier=None`` -> LocalStore."""
+    (cache capacity / tier / admission). ``tier=None`` -> LocalStore."""
     scfg = store_cfg if store_cfg is not None else ecfg.store
     if tier is None:
         return LocalStore(ecfg)
     base = TierStore(ecfg, tier)
     if scfg is not None and scfg.cache_rows > 0:
+        admission = getattr(scfg, "admission", "lru")
+        assert admission in ("lru", "tinylfu"), admission
+        adm = TinyLFUAdmission() if admission == "tinylfu" else None
         return CachedStore(base, cache_tier=scfg.cache_tier,
-                           cache=LRUHotRowCache(scfg.cache_rows))
+                           cache=LRUHotRowCache(scfg.cache_rows,
+                                                admission=adm))
     return base
 
 

@@ -13,18 +13,32 @@ Maps the paper's §4.3 integration onto a self-contained JAX engine:
   * Computation — slot-based continuous batching: a fixed decode batch of
     ``max_batch`` slots; finished slots are freed and refilled by new
     prefills mid-flight (requests join/leave without draining the batch).
+  * Speculation — with a ``SpecConfig`` the engine runs in ``speculate``
+    mode: each wave a proposer drafts k tokens per live slot, the Engram
+    prefetch covers the *entire* speculated window (position j of the
+    block is issued j token-slots before consumption — the paper's §3.2
+    claim that speculative decoding widens the prefetch window to multiple
+    full steps, now measured instead of assumed), a batched verifier
+    scores the block in one pass, and rejected tails are rolled back per
+    slot (serving/slots.rollback_state). Stalls are charged only for the
+    positions that execute and survive; the mis-speculated tail counts as
+    wasted prefetch and its replacement rows are refetched by the next
+    wave's narrow-window position 0.
 
 Pool-tier emulation: on real hardware the Engram fetch either hides inside
 the prefetch window or stalls the step (paper §3.2). The engine delegates
 that entirely to the tiered ``EngramStore`` subsystem (pool/store.py): a
 ``PrefetchScheduler`` issues each wave's retrieval through the store —
-which owns tier latency, the optional LRU hot-row cache, and measured
-hit-rate accounting — and the engine sleeps (real point) or accounts
-(emulated point) only the overshoot the scheduler reports. `pool=None`
-(weights local/HBM) resolves to a ``LocalStore`` with zero emulated cost:
-that is the baseline, and the '+Engram (DRAM-local)' configs of Table 2
-differ only by engram compute. ``engine.store.stats()`` exposes the
-store-measured hit rates and stall totals.
+which owns tier latency, the optional hot-row cache, and measured hit-rate
+accounting — and the engine sleeps (real point) or accounts (emulated
+point) only the overshoot the scheduler reports. On pool runs the decode
+rows are materialized through ``TableFetcher`` — the padded Pallas
+miss-path gather — so cache-miss materialization is on-device end-to-end.
+`pool=None` (weights local/HBM) resolves to a ``LocalStore`` with zero
+emulated cost: that is the baseline, and the '+Engram (DRAM-local)'
+configs of Table 2 differ only by engram compute. ``engine.store.stats()``
+exposes the store-measured hit rates, stall totals, and speculation
+counters (accepted/wasted prefetch, measured window depth).
 """
 from __future__ import annotations
 
@@ -37,14 +51,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ModelConfig
+from ..configs.base import ModelConfig, SpecConfig
 from ..core.engram import retrieve
-from ..core.hashing import decode_engram_indices, engram_indices
+from ..core.hashing import (block_engram_indices, decode_engram_indices,
+                            engram_indices)
 from ..models.model import (build_decode_step, build_prefill_step,
                             init_decode_state, init_params)
 from ..models.transformer import RunFlags
 from ..pool.scheduler import PrefetchScheduler
-from ..pool.store import make_store, segment_keys
+from ..pool.store import TableFetcher, make_store, segment_keys
 from ..pool.tiers import TIERS
 from .slots import update_slots
 
@@ -68,6 +83,10 @@ class EngineStats:
     wall_s: float = 0.0
     stall_s: float = 0.0
     emu_time_s: float = 0.0          # accumulated emulated step + stall time
+    # --- speculation ------------------------------------------------------
+    spec_waves: int = 0              # verify waves run
+    proposed_tokens: int = 0         # drafts proposed (k per live slot-wave)
+    accepted_tokens: int = 0         # drafts that survived verification
 
     @property
     def tokens_per_s(self) -> float:
@@ -78,6 +97,11 @@ class EngineStats:
         """Throughput at the emulated operating point (paper-scale steps)."""
         return (self.generated_tokens / self.emu_time_s
                 if self.emu_time_s else 0.0)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return (self.accepted_tokens / self.proposed_tokens
+                if self.proposed_tokens else 0.0)
 
 
 def _bucket(n: int, bucket: int) -> int:
@@ -90,11 +114,15 @@ class Engine:
                  max_len: int = 512, prompt_bucket: int = 32,
                  pool: Optional[str] = None, seed: int = 0,
                  step_latency_hint_s: Optional[float] = None,
-                 emulate_step_s: Optional[float] = None):
+                 emulate_step_s: Optional[float] = None,
+                 spec: Optional[SpecConfig] = None, proposer=None):
         """``emulate_step_s``: evaluate the pool stalls at a production
         operating point (ms-scale decode steps) instead of this host's
         CPU step times — stalls are then accounted in ``emu_time_s``
-        rather than slept (Table 2/3 emulation)."""
+        rather than slept (Table 2/3 emulation).
+
+        ``spec``: run in speculate mode (overrides ``cfg.spec``);
+        ``proposer``: inject a custom draft proposer (tests/benches)."""
         assert not cfg.is_encoder, "serving needs a decoder"
         self.cfg = cfg
         self.flags = flags
@@ -106,16 +134,29 @@ class Engine:
         self.params = params if params is not None else init_params(cfg, seed)
         self.has_engram = bool(cfg.engram_layers()) and "engram" in self.params
 
+        spec_cfg = spec if spec is not None else cfg.spec
+        self.spec = spec_cfg if (spec_cfg is not None and spec_cfg.enabled) \
+            else None
+
         # tiered store + prefetch scheduler (pool/store.py): the single
         # owner of tier latency / cache / stall semantics. pool=None maps
         # to a LocalStore (no emulated pool cost — the Table 2 baseline).
         self.store = None
         self.scheduler = None
+        self._fetchers = None
         if self.has_engram:
             self.store = make_store(cfg.engram, pool)
             self.scheduler = PrefetchScheduler(self.store, cfg.engram,
                                                layers=cfg.engram_layers(),
                                                n_layers=cfg.n_layers)
+            if self.pool is not None:
+                # decode miss-path materialization through the padded
+                # Pallas gather: the store's pool read is a real on-device
+                # kernel launch, not a jnp.take detour
+                self._fetchers = [
+                    TableFetcher(cfg.engram,
+                                 self.params["engram"]["layers"][j]["tables"])
+                    for j in range(len(cfg.engram_layers()))]
 
         # jitted index fn for store accounting (host-side key packing needs
         # the values, so each charged wave pays one device sync; that cost
@@ -131,6 +172,26 @@ class Engine:
         self._decode_ext = jax.jit(ext) if ext else None
         self._prefetch = jax.jit(self._prefetch_fn) if self.has_engram else None
         self._insert = jax.jit(update_slots, static_argnames=())
+
+        # speculate mode: verifier + proposer + block-shaped retrieval
+        self.proposer = None
+        self._verify = None
+        self._verify_ext = None
+        self._block_idx = None
+        self._block_prefetch = None
+        if self.spec is not None:
+            from ..spec.proposer import make_proposer
+            from ..spec.verifier import build_verifier
+            self.proposer = proposer if proposer is not None \
+                else make_proposer(cfg, self.spec, flags=flags, seed=seed)
+            self._verify = jax.jit(build_verifier(cfg, flags))
+            if self.has_engram:
+                self._verify_ext = jax.jit(
+                    build_verifier(cfg, flags, external_rows=True))
+                self._block_idx = jax.jit(
+                    lambda last, block: block_engram_indices(cfg.engram,
+                                                             last, block))
+                self._block_prefetch = jax.jit(self._block_prefetch_fn)
 
         self.state = init_decode_state(cfg, flags, max_batch, max_len)
         self.slots: list[Optional[Request]] = [None] * max_batch
@@ -157,7 +218,10 @@ class Engine:
         t0 = time.perf_counter()
         while self.queue or any(s is not None for s in self.slots):
             self._admit()
-            self._decode_wave()
+            if self.spec is not None:
+                self._spec_wave()
+            else:
+                self._decode_wave()
         self.stats.wall_s += time.perf_counter() - t0
         return self.stats
 
@@ -201,6 +265,8 @@ class Engine:
             self.slots[slot] = req
             self.stats.prefills += 1
             self.stats.generated_tokens += 1
+            if self.proposer is not None:
+                self.proposer.begin(slot, req.prompt + req.out)
             self._finish_if_done(slot)
 
     # ----------------------------------------------------------- decode path
@@ -214,6 +280,20 @@ class Engine:
             rows.append(retrieve(e, tab, idx, self.flags.engram_strategy))
         return rows
 
+    def _miss_fetches(self, idx: np.ndarray):
+        """Per-layer fetch closures materializing a wave's rows through
+        the padded Pallas miss-path gather (``TableFetcher``). ``idx``
+        is the FULL batch's (B, S, T) index block — decode consumes rows
+        for every slot, while the store is charged with live keys only."""
+        e = self.cfg.engram
+        B, S = idx.shape[:2]
+
+        def layer_fetch(j):
+            keys = segment_keys(e, idx, layer_slot=j)
+            return lambda: self._fetchers[j](keys).reshape(B, S, -1)
+
+        return [layer_fetch(j) for j in range(len(self._fetchers))]
+
     def _decode_wave(self) -> None:
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
@@ -221,20 +301,21 @@ class Engine:
         t0 = time.perf_counter()
         if self.emulate_step_s is not None:
             self.stats.emu_time_s += self.emulate_step_s
-        fetch = None
-        if self._decode_ext is not None:
-            # the paper's prefetch: retrieval dispatched as its own call,
-            # materialized through the store (prefetch -> gather)
-            fetch = lambda: self._prefetch(self.params,
-                                           self.state["last_tokens"],
-                                           self.tokens)
+        rows = None
         if self.pool is not None and self.has_engram:
             # the active slots' real segment-key stream: the store's cache
             # measures hit rates on it, the scheduler charges the overshoot
             idx = np.asarray(self._decode_idx(self.state["last_tokens"],
                                               self.tokens))
+            fetch = self._miss_fetches(idx) \
+                if self._decode_ext is not None else None
             rows = self._charge_wave(idx[np.asarray(active)], fetch=fetch)
-        elif fetch is not None:
+        elif self._decode_ext is not None:
+            # the paper's prefetch: retrieval dispatched as its own call,
+            # materialized through the store (prefetch -> gather)
+            fetch = lambda: self._prefetch(self.params,
+                                           self.state["last_tokens"],
+                                           self.tokens)
             rows = self.store.gather(
                 self.store.prefetch(len(active), fetch=fetch))
         if self._decode_ext is not None:
@@ -253,12 +334,114 @@ class Engine:
             self.stats.generated_tokens += 1
             self._finish_if_done(i)
 
+    # ------------------------------------------------------ speculate path
+
+    def _block_prefetch_fn(self, params, last_tokens, block):
+        """Fused block retrieval for pool=None speculation (LocalStore)."""
+        e = self.cfg.engram
+        idx = block_engram_indices(e, last_tokens, block)
+        rows = []
+        for j, _ in enumerate(self.cfg.engram_layers()):
+            tab = params["engram"]["layers"][j]["tables"]
+            rows.append(retrieve(e, tab, idx, self.flags.engram_strategy))
+        return rows
+
+    def _spec_wave(self) -> None:
+        """One speculative wave: propose k drafts per live slot, prefetch
+        the whole block's Engram window, verify in one batched pass, roll
+        back rejected tails, charge stalls for surviving positions only."""
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
+        t0 = time.perf_counter()
+        k = self.spec.max_draft
+        m = k + 1
+        B = self.max_batch
+
+        block = np.zeros((B, m), np.int32)
+        block[:, 0] = np.asarray(self.tokens)
+        for i in active:
+            req = self.slots[i]
+            block[i, 1:] = self.proposer.propose(i, req.prompt + req.out, k)
+        block_j = jnp.asarray(block)
+
+        # the verify pass costs ~one decode step (memory-bound) plus a
+        # small per-extra-token compute term
+        step_s = self._step_estimate_s()
+        verify_s = step_s * (1.0 + self.spec.verify_overhead * (m - 1))
+        if self.emulate_step_s is not None:
+            self.stats.emu_time_s += verify_s
+
+        spec_report = None
+        rows = None
+        if self.has_engram:
+            if self.pool is not None:
+                e = self.cfg.engram
+                nl = len(self.cfg.engram_layers())
+                idx = np.asarray(self._block_idx(self.state["last_tokens"],
+                                                 block_j))       # (B, m, T)
+                act = np.asarray(active)
+                keys_by_pos = [
+                    [segment_keys(e, idx[act, s:s + 1], layer_slot=j)
+                     for j in range(nl)]
+                    for s in range(m)]
+                spec_report = self.scheduler.speculative_wave(keys_by_pos,
+                                                              verify_s)
+                fetches = self._miss_fetches(idx)
+                rows = [f() for f in fetches]
+            elif self._verify_ext is not None:
+                fetch = lambda: self._block_prefetch(
+                    self.params, self.state["last_tokens"], block_j)
+                rows = self.store.gather(
+                    self.store.prefetch(len(active) * m, fetch=fetch))
+
+        if rows is not None:
+            preds, n_accept, next_tok, new_state = self._verify_ext(
+                self.params, self.state, block_j, rows)
+        else:
+            preds, n_accept, next_tok, new_state = self._verify(
+                self.params, self.state, block_j)
+        self.state = new_state
+        self.tokens = next_tok
+
+        n_acc = np.asarray(n_accept)
+        preds_np = np.asarray(preds)
+        if spec_report is not None:
+            acc_active = n_acc[np.asarray(active)]
+            n_keep = int(acc_active.max()) + 1
+            stall = self.scheduler.charge_spec(
+                spec_report, n_keep,
+                tokens_emitted=int((acc_active + 1).sum()))
+            self.stats.stall_s += stall
+            if self.emulate_step_s is None:
+                if stall > 0:
+                    time.sleep(stall)
+            else:
+                self.stats.emu_time_s += stall
+
+        self._step_times.append(time.perf_counter() - t0)
+        self.stats.decode_steps += 1
+        self.stats.spec_waves += 1
+        for i in active:
+            req = self.slots[i]
+            a = int(n_acc[i])
+            room = req.max_new - len(req.out)
+            emit = preds_np[i, :a + 1][:room].tolist()
+            req.out.extend(int(t) for t in emit)
+            self.stats.generated_tokens += len(emit)
+            self.stats.proposed_tokens += k
+            self.stats.accepted_tokens += a
+            self.proposer.observe(i, req.prompt + req.out)
+            self._finish_if_done(i)
+
     def _finish_if_done(self, slot: int) -> None:
         req = self.slots[slot]
         if req is not None and len(req.out) >= req.max_new:
             req.done_s = time.perf_counter()
             self.done[req.rid] = req
             self.slots[slot] = None
+            if self.proposer is not None:
+                self.proposer.end(slot)
 
     # ------------------------------------------------------- pool emulation
 
@@ -276,8 +459,9 @@ class Engine:
         packed segment-key stream per Engram layer (each layer owns its
         tables), so a configured hot-row cache measures real reuse. The
         scheduler computes the per-layer window overshoot, which is slept
-        (real point) or accounted (emulated point). Returns the gathered
-        rows when ``fetch`` is given."""
+        (real point) or accounted (emulated point). Returns the per-layer
+        gathered rows when ``fetch`` is given (a per-layer fetch list or a
+        fused callable)."""
         e = self.cfg.engram
         keys = [segment_keys(e, idx, layer_slot=j)
                 for j in range(len(self.cfg.engram_layers()))]

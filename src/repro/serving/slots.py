@@ -1,15 +1,28 @@
-"""Slot-batched decode-state surgery for continuous batching.
+"""Slot-batched decode-state surgery for continuous batching + speculation.
 
 The decode state is a pytree whose leaves carry the batch dimension at
 different positions (stacked-layer leaves have leading (n_periods, ...)
 axes). ``update_slots`` scatter-writes k new-request states into k slots of
 the engine's live state, leaf by leaf, locating the batch axis the same way
 launch/specs.py does for shardings.
+
+``snapshot_recurrent`` / ``rollback_state`` are the speculative-decoding
+surgery: a verify pass advances the state by the whole proposed block, and
+the rejected tail must be truncated per slot. KV-cache leaves (k / v /
+c_kv / k_rope) are positional — entries beyond ``positions`` are never
+attended (the decode mask is ``kpos <= positions``) and are overwritten in
+place when decoding resumes — so their rollback is just the positions
+rewind. Recurrent leaves (conv / ssm / xLSTM cell states) have no
+positional identity; they are snapshotted per verify step and re-selected
+at the per-slot accepted length.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+# KV-cache leaves: positional, masked by `positions`, rolled back for free.
+KV_KEYS = frozenset({"k", "v", "c_kv", "k_rope"})
 
 # suffix logical axes per leaf name; batch position = ndim - len(axes) + idx
 _STATE_AXES = {
@@ -69,3 +82,53 @@ def select_slots(state, slots: jax.Array):
         return jnp.moveaxis(jnp.moveaxis(leaf, ax, 0)[slots], 0, ax)
 
     return jax.tree_util.tree_map_with_path(one, state)
+
+
+# ---------------------------------------------------------------------------
+# speculative-decoding rollback
+# ---------------------------------------------------------------------------
+
+def snapshot_recurrent(state):
+    """Cheap per-step snapshot for speculative rollback: keep recurrent
+    leaves (plus positions / last_tokens), replace positional KV leaves by
+    0-d placeholders so the tree structure — and thus ``tree_map`` over
+    (final_state, *snapshots) — stays intact without retaining m copies of
+    the KV cache."""
+
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        if _leaf_key(path) in KV_KEYS:
+            return jnp.zeros((), leaf.dtype)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+def rollback_state(final_state, snapshots, n_keep: jax.Array):
+    """Truncate rejected speculation per slot.
+
+    ``final_state``: state after the full m-step verify pass.
+    ``snapshots``: list of m+1 ``snapshot_recurrent`` trees, where
+    ``snapshots[s]`` is the state after s verify steps (s=0 = pre-verify).
+    ``n_keep (B,)``: verify steps to keep per slot, in [0, m].
+
+    Recurrent leaves (and positions / last_tokens) are re-selected at
+    ``snapshots[n_keep[b]]`` per slot; KV leaves keep the final buffers —
+    rows beyond the rewound ``positions`` are masked and will be
+    overwritten in place by subsequent decode writes.
+    """
+    sel = jnp.asarray(n_keep, jnp.int32)
+
+    def one(path, leaf_final, *snap_leaves):
+        if leaf_final is None:
+            return None
+        if _leaf_key(path) in KV_KEYS:
+            return leaf_final
+        ax = batch_axis(path, leaf_final)
+        stacked = jnp.stack(snap_leaves)              # (m+1, ...)
+        moved = jnp.moveaxis(stacked, ax + 1, 1)      # (m+1, B, ...)
+        picked = moved[sel, jnp.arange(sel.shape[0])]
+        return jnp.moveaxis(picked, 0, ax)
+
+    return jax.tree_util.tree_map_with_path(one, final_state, *snapshots)

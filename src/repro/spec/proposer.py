@@ -1,0 +1,230 @@
+"""Draft-token proposers for speculative decoding.
+
+A proposer guesses the next ``k`` tokens of a slot from its visible
+context. Correctness never depends on proposal quality — the verifier
+accepts exactly the greedy continuation — so proposers only trade
+acceptance rate (deeper realized prefetch windows) against proposal cost:
+
+  * ``NGramProposer``   — suffix-cache over the engine's own emitted
+                          streams; no extra weights, near-free proposals,
+                          high acceptance on repetitive traffic (the same
+                          Zipf reuse the paper's §6 cache feeds on).
+  * ``DraftModelProposer`` — a shrunken ``ModelConfig`` run through the
+                          regular ``build_prefill_step``/``build_decode_step``
+                          builders; stateless across waves (it re-prefills
+                          a short context window per proposal), so it
+                          needs no draft-side rollback surgery.
+  * ``ScriptedProposer`` / ``ConstantProposer`` — test/bench harness
+                          proposers pinning acceptance to 100% / ~0%.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from ..configs.base import ModelConfig, SpecConfig
+
+
+@runtime_checkable
+class Proposer(Protocol):
+    def begin(self, slot: int, context: Sequence[int]) -> None:
+        """A request entered ``slot``; ``context`` is its prompt (+ first
+        token)."""
+        ...
+
+    def observe(self, slot: int, context: Sequence[int]) -> None:
+        """``context`` is the slot's full visible stream after a wave."""
+        ...
+
+    def propose(self, slot: int, context: Sequence[int],
+                k: int) -> list[int]:
+        """Draft the next ``k`` tokens after ``context`` (always length k —
+        pad with a guess; bad guesses are rejected, not wrong)."""
+        ...
+
+    def end(self, slot: int) -> None:
+        """The slot's request finished."""
+        ...
+
+
+class _ProposerBase:
+    def begin(self, slot: int, context: Sequence[int]) -> None:
+        pass
+
+    def observe(self, slot: int, context: Sequence[int]) -> None:
+        pass
+
+    def end(self, slot: int) -> None:
+        pass
+
+
+class NGramProposer(_ProposerBase):
+    """Suffix-cache proposer: longest-match n-gram lookup over every stream
+    the engine has emitted (global table — repeated requests teach it the
+    exact greedy continuation, so replays verify at ~100%)."""
+
+    def __init__(self, order: int = 4, max_entries: int = 1_000_000):
+        assert order >= 2, order
+        self.order = order                       # suffix lengths 1..order-1
+        self.max_entries = int(max_entries)      # bound on stored suffixes
+        self._tables: list[dict] = [dict() for _ in range(order - 1)]
+        self._seen: dict[int, int] = {}          # slot -> ingested length
+        self.pruned = 0
+
+    # ----------------------------------------------------------- ingest
+    def begin(self, slot: int, context: Sequence[int]) -> None:
+        self._seen[slot] = 0
+        self.observe(slot, context)
+
+    def observe(self, slot: int, context: Sequence[int]) -> None:
+        ctx = list(context)
+        start = max(self._seen.get(slot, 0), 1)
+        for i in range(start, len(ctx)):
+            nxt = ctx[i]
+            for l in range(1, self.order):
+                if i - l < 0:
+                    break
+                key = tuple(ctx[i - l:i])
+                bucket = self._tables[l - 1].setdefault(key, {})
+                bucket[nxt] = bucket.get(nxt, 0) + 1
+        self._seen[slot] = len(ctx)
+        self._maybe_prune()
+
+    def _maybe_prune(self) -> None:
+        """Bound memory for a long-lived engine: past ``max_entries``
+        suffixes, drop once-seen entries first (the long tail of diverse
+        traffic), then fall back to clearing the longest-suffix table —
+        the cheapest to relearn and the first to diverge anyway."""
+        if sum(len(t) for t in self._tables) <= self.max_entries:
+            return
+        for t in self._tables:
+            stale = [k for k, b in t.items()
+                     if len(b) == 1 and max(b.values()) <= 1]
+            for k in stale:
+                del t[k]
+                self.pruned += 1
+        while sum(len(t) for t in self._tables) > self.max_entries:
+            longest = max(self._tables, key=len)
+            self.pruned += len(longest)
+            longest.clear()
+
+    def end(self, slot: int) -> None:
+        self._seen.pop(slot, None)
+
+    # ---------------------------------------------------------- propose
+    def _next(self, ctx: list[int]):
+        for l in range(self.order - 1, 0, -1):   # longest suffix first
+            if len(ctx) < l:
+                continue
+            bucket = self._tables[l - 1].get(tuple(ctx[-l:]))
+            if bucket:
+                # deterministic: max count, then smallest token id
+                return max(bucket.items(), key=lambda kv: (kv[1], -kv[0]))[0]
+        return None
+
+    def propose(self, slot: int, context: Sequence[int],
+                k: int) -> list[int]:
+        ctx = list(context)
+        out = []
+        for _ in range(k):
+            t = self._next(ctx)
+            if t is None:
+                t = ctx[-1] if ctx else 0        # repeat-last fallback
+            out.append(int(t))
+            ctx.append(int(t))
+        return out
+
+
+def draft_config(cfg: ModelConfig, spec: SpecConfig) -> ModelConfig:
+    """Shrink ``cfg`` to its first ``spec.draft_layers`` layers for the
+    draft model — same vocabulary and embedding width (the draft shares
+    the token space), no Engram (drafts must stay off the pool's hot
+    path)."""
+    d = max(1, min(spec.draft_layers, cfg.n_layers))
+    return dataclasses.replace(
+        cfg, name=f"{cfg.name}-draft", n_layers=d,
+        layer_types=cfg.layer_types[:d], attn_kinds=cfg.attn_kinds[:d],
+        ffn_types=cfg.ffn_types[:d], engram=None, spec=None)
+
+
+class DraftModelProposer(_ProposerBase):
+    """Small draft model reusing the target's step builders on a shrunken
+    config. Stateless across waves: each proposal re-prefills the last
+    ``draft_context`` tokens and decodes ``k`` greedy continuations —
+    costlier than the n-gram cache but context-aware on fresh text, and
+    immune to target-side rollback (no draft state survives a wave)."""
+
+    def __init__(self, cfg: ModelConfig, spec: SpecConfig, *, flags=None,
+                 seed: int = 0, params=None):
+        import jax
+        from ..models.model import (build_decode_step, build_prefill_step,
+                                    init_params)
+        from ..models.transformer import RunFlags
+        self.cfg = draft_config(cfg, spec)
+        self.ctx_len = max(4, int(spec.draft_context))
+        flags = flags if flags is not None else RunFlags()
+        self.params = params if params is not None \
+            else init_params(self.cfg, seed)
+        max_len = self.ctx_len + spec.max_draft + 1
+        self._prefill = jax.jit(build_prefill_step(self.cfg, flags,
+                                                   max_len=max_len))
+        self._decode = jax.jit(build_decode_step(self.cfg, flags))
+
+    def propose(self, slot: int, context: Sequence[int],
+                k: int) -> list[int]:
+        import jax.numpy as jnp
+        ctx = list(context)[-self.ctx_len:]
+        if not ctx:
+            return [0] * k
+        toks = np.zeros((1, self.ctx_len), np.int32)
+        toks[0, :len(ctx)] = ctx
+        logits, state = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "lengths": jnp.asarray([len(ctx)], np.int32)})
+        out = [int(jnp.argmax(logits[0]))]
+        for _ in range(k - 1):
+            logits, state = self._decode(self.params, state,
+                                         jnp.asarray([out[-1]], jnp.int32))
+            out.append(int(jnp.argmax(logits[0])))
+        return out[:k]
+
+
+class ScriptedProposer(_ProposerBase):
+    """Oracle proposer for tests/benches: given the full expected stream
+    per request (prompt + greedy continuation), proposes exactly the next
+    k tokens — 100% acceptance when the script matches the model."""
+
+    def __init__(self, streams: Sequence[Sequence[int]]):
+        self.streams = [list(s) for s in streams]
+
+    def propose(self, slot: int, context: Sequence[int],
+                k: int) -> list[int]:
+        ctx = list(context)
+        for s in self.streams:
+            if len(s) >= len(ctx) and s[:len(ctx)] == ctx:
+                tail = s[len(ctx):len(ctx) + k]
+                return tail + [0] * (k - len(tail))
+        return [0] * k
+
+
+class ConstantProposer(_ProposerBase):
+    """Adversarial proposer for tests: always drafts ``token`` — pins
+    acceptance to ~0% (unless the model really does emit it)."""
+
+    def __init__(self, token: int = 0):
+        self.token = int(token)
+
+    def propose(self, slot: int, context: Sequence[int],
+                k: int) -> list[int]:
+        return [self.token] * k
+
+
+def make_proposer(cfg: ModelConfig, spec: SpecConfig, *, flags=None,
+                  seed: int = 0) -> Proposer:
+    if spec.proposer == "ngram":
+        return NGramProposer(order=spec.ngram_order)
+    if spec.proposer == "draft":
+        return DraftModelProposer(cfg, spec, flags=flags, seed=seed + 1)
+    raise ValueError(f"unknown proposer {spec.proposer!r}")

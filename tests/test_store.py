@@ -10,7 +10,8 @@ from conftest import reduced
 
 from repro.configs.base import ENGRAM_27B, EngramConfig, StoreConfig
 from repro.pool import TIERS, paper_case_study
-from repro.pool.cache import LRUHotRowCache, zipf_keys
+from repro.pool.cache import (FrequencySketch, LRUHotRowCache,
+                              TinyLFUAdmission, zipf_keys)
 from repro.pool.scheduler import PrefetchScheduler
 from repro.pool.simulator import cached_read_latency_s, read_latency_s
 from repro.pool.store import (CachedStore, LocalStore, TierStore, make_store,
@@ -123,6 +124,55 @@ def test_lru_evicts_cold_keeps_hot_under_zipf():
     assert uni.hit_rate < 0.1 < 0.4 < cache.hit_rate
 
 
+# ------------------------------------------------- TinyLFU admission
+
+def test_frequency_sketch_orders_hot_vs_cold():
+    sk = FrequencySketch(width=1 << 12)
+    for _ in range(8):
+        sk.observe([7, 7, 7, 42])
+    hot, cold = sk.estimate([7, 123456])
+    assert hot > cold >= 0
+
+
+def test_tinylfu_resists_scans_where_lru_thrashes():
+    """A hot working set + a never-repeating scan: plain LRU lets the scan
+    flush the hot rows, TinyLFU admission keeps them resident."""
+    hot = np.arange(80)
+    cap = 100
+
+    def drive(cache):
+        scan = 10_000
+        hot_hits = hot_total = 0
+        for w in range(60):
+            acc = cache.access_wave(hot)                 # hot traffic
+            if w >= 10:                                  # past warmup
+                hot_hits += acc.hits
+                hot_total += acc.n_segments
+            cache.access_wave(np.arange(scan, scan + 200))  # one-shot scan
+            scan += 200
+        return hot_hits / hot_total
+
+    lru_rate = drive(LRUHotRowCache(cap))
+    adm = TinyLFUAdmission()
+    lfu_rate = drive(LRUHotRowCache(cap, admission=adm))
+    assert lru_rate < 0.2                       # scan flushed the hot set
+    assert lfu_rate > 0.9                       # admission kept it
+    assert adm.rejected > 0                     # scan keys really rejected
+
+
+def test_tinylfu_selected_via_store_config():
+    from repro.pool.store import make_store
+    scfg = StoreConfig(cache_rows=64, admission="tinylfu")
+    store = make_store(E27, "RDMA", store_cfg=scfg)
+    assert isinstance(store, CachedStore)
+    assert isinstance(store.cache.admission, TinyLFUAdmission)
+    plain = make_store(E27, "RDMA", store_cfg=StoreConfig(cache_rows=64))
+    assert plain.cache.admission is None        # LRU stays the default
+    with pytest.raises(AssertionError):
+        make_store(E27, "RDMA",
+                   store_cfg=StoreConfig(cache_rows=64, admission="bogus"))
+
+
 # ------------------------------------------------------------- scheduler
 
 def test_scheduler_hides_when_window_allows():
@@ -141,7 +191,9 @@ def test_scheduler_hides_when_window_allows():
 
 
 def test_scheduler_depth_semantics():
-    """depth 0 = no window (sync fetch); deeper pipelines widen it."""
+    """depth 0 = no window (sync fetch); depth 1 = the paper's one-step
+    prefetch. Deeper windows are NOT a knob — they come from verified
+    speculation (speculative_wave), tested in tests/test_spec.py."""
     point = paper_case_study()
     store = TierStore(E27, "CXL")
     sync = PrefetchScheduler(store, E27, [1], point.n_layers,
@@ -149,10 +201,39 @@ def test_scheduler_depth_semantics():
     assert sync.window_s(1, point.step_latency_s) == 0.0
     r = sync.step(point.batch_tokens, point.step_latency_s)
     assert r.stall_s == pytest.approx(r.latency_s)  # nothing hidden
-    deep = PrefetchScheduler(store, E27, [1], point.n_layers,
-                             prefetch_depth=2)
-    assert deep.window_s(1, point.step_latency_s) == pytest.approx(
-        point.step_latency_s / point.n_layers + point.step_latency_s)
+    one = PrefetchScheduler(store, E27, [1], point.n_layers)
+    assert one.window_s(1, point.step_latency_s) == pytest.approx(
+        point.step_latency_s / point.n_layers)
+    with pytest.raises(AssertionError):             # emulation knob removed
+        PrefetchScheduler(store, E27, [1], point.n_layers, prefetch_depth=2)
+
+
+def test_wave_report_gathers_every_layer():
+    """Regression: with >=2 Engram layers, gather must materialize every
+    layer's handle (it used to return handles[0] only, silently dropping
+    rows for all later layers)."""
+    e2 = dataclasses.replace(E27, layers=(2, 15))
+    store = TierStore(e2, "CXL")
+    sched = PrefetchScheduler(store, e2, [1, 14], n_layers=36)
+    n_seg = segment_count(e2, 4)
+    keys = [np.arange(n_seg), np.arange(n_seg) + 10 * n_seg]
+
+    # fused fetch (the engine's jitted retrieval returning per-layer rows)
+    calls = []
+
+    def fused():
+        calls.append(1)
+        return ["rows-L0", "rows-L1"]
+
+    r = sched.step(keys, 1e-3, fetch=fused)
+    assert r.gather(store) == ["rows-L0", "rows-L1"]
+    assert calls == [1]                         # one materialization, shared
+    assert store.stats().gathers == 2           # but both handles gathered
+
+    # per-layer fetch list
+    r2 = sched.step(keys, 1e-3,
+                    fetch=[lambda: "a", lambda: "b"])
+    assert r2.gather(store) == ["a", "b"]
 
 
 def test_scheduler_cached_store_rescues_rdma():
