@@ -1,13 +1,15 @@
 """Table 3: DP x nnode scaling of the CXL pool (simulator: shared-switch
-contention model) + a measured two-engine DP=2 point on the real engine."""
+contention model) + a measured DP sweep on the real Router fleet — engine
+replicas sharing one hot-row cache, traffic from the unified Workload
+spec (the same `serving.serve` path every other driver uses)."""
 from __future__ import annotations
 
-import dataclasses
-
 from repro.configs.base import ENGRAM_27B, EngramConfig
-from repro.launch.serve import run_once
+from repro.launch.serve import with_store
 from repro.launch.train import reduced_config
-from repro.pool import paper_case_study, scalability_table
+from repro.pool import measured_scalability, paper_case_study, \
+    scalability_table
+from repro.serving import Workload
 
 from .common import emit, write_csv
 
@@ -27,22 +29,24 @@ def run(fast: bool = False) -> None:
               rows)
 
     if not fast:
-        # measured DP emulation: two engine replicas sharing the pool model
-        cfg = reduced_config("deepseek-7b")
-        e1, s1 = run_once(cfg, requests=6, max_new=6, pool="CXL",
-                          max_batch=4, max_len=64)
-        _, s2a = run_once(cfg, requests=3, max_new=6, pool="CXL",
-                          max_batch=4, max_len=64, seed=1)
-        _, s2b = run_once(cfg, requests=3, max_new=6, pool="CXL",
-                          max_batch=4, max_len=64, seed=2)
-        agg = s2a.generated_tokens + s2b.generated_tokens
-        wall = max(s2a.wall_s, s2b.wall_s)
-        st = e1.store.stats()
-        emit("scalability/measured_dp1", 1e6 / max(s1.tokens_per_s, 1e-9),
-             f"{s1.tokens_per_s:.1f}tok/s store[{st.tier}] "
-             f"hidden {st.hidden_waves}/{st.waves} waves")
-        emit("scalability/measured_dp2_serial", 1e6 / max(agg / (s2a.wall_s + s2b.wall_s), 1e-9),
-             f"{agg/(s2a.wall_s+s2b.wall_s):.1f}tok/s (1-core serial bound)")
+        # measured DP: Router replicas multiplexing one CXL pool through a
+        # shared hot-row cache, same shared-prompt workload at every DP
+        cfg = with_store(reduced_config("deepseek-7b"), cache_rows=100_000)
+        wl = Workload(requests=6, max_new=6, prompt_pool=3)
+        mrows = []
+        for r in measured_scalability(cfg, wl, dps=(1, 2), pool="CXL",
+                                      max_batch=4, max_len=64):
+            mrows.append([r["dp"], r["tokens"], round(r["wall_s"], 3),
+                          round(r["tokens_per_s"], 1),
+                          round(r["cache_hit_rate"], 3)])
+            emit(f"scalability/measured_dp{r['dp']}",
+                 1e6 / max(r["tokens_per_s"], 1e-9),
+                 f"{r['tokens_per_s']:.1f}tok/s "
+                 f"cache_hit={r['cache_hit_rate']:.2f} "
+                 f"(fleet wall = slowest replica)")
+        write_csv("scalability_measured",
+                  ["dp", "tokens", "wall_s", "tokens_per_s",
+                   "cache_hit_rate"], mrows)
 
 
 if __name__ == "__main__":

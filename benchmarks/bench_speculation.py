@@ -74,19 +74,19 @@ def analytic_grid(ecfg: EngramConfig, tiers=("CXL", "RDMA"),
 def measured_engine(pool: str, *, speculate: bool, requests: int = 10,
                     max_new: int = 8):
     """Tiny engine on a repetitive workload (identical prompts: greedy
-    replay is the n-gram proposer's steady state)."""
+    replay is the n-gram proposer's steady state) — the unified
+    `Workload` pinned to one explicit prompt, driven through
+    `serving.serve`."""
     from repro.models.model import init_params
-    from repro.serving import Engine
+    from repro.serving import Workload, serve
     cfg = _tiny_cfg()
     params = init_params(cfg, 0)
     spec = SpecConfig(max_draft=MAX_DRAFT) if speculate else None
-    eng = Engine(cfg, params=params, max_batch=2, max_len=64,
-                 prompt_bucket=8, pool=pool, emulate_step_s=STEP_S,
-                 spec=spec)
-    for _ in range(requests):
-        eng.submit([5, 17, 42], max_new=max_new)
-    stats = eng.run()
-    return eng, stats
+    wl = Workload(requests=requests, max_new=max_new,
+                  prompts=((5, 17, 42),), prompt_pool=1)
+    res = serve(cfg, wl, pool=pool, params=params, max_batch=2, max_len=64,
+                prompt_bucket=8, emulate_step_s=STEP_S, spec=spec)
+    return res.frontend, res.stats
 
 
 def run(fast: bool = False) -> None:

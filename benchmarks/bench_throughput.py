@@ -7,6 +7,10 @@ Two readouts per variant:
   * tokens/s at the emulated production point (0.2 ms decode steps — a
     per-layer window comparable to the paper's 56 us), where the pool
     stall model decides whether retrieval hides in the prefetch window.
+
+Traffic is one shared `Workload` spec (Zipf-skewed prompt tokens, the
+paper's n-gram reuse model) driven through `serving.serve` via
+`run_once` — the same construction every driver uses.
 """
 from __future__ import annotations
 

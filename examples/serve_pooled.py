@@ -1,9 +1,11 @@
-"""Serve an Engram model with batched requests from a simulated CXL pool,
-reproducing the Table 2 comparison (baseline / +Engram DRAM / +Engram CXL).
+"""Serve an Engram model from a simulated CXL pool through the
+request-lifecycle `EngramRuntime` API, reproducing the Table 2 comparison
+(baseline / +Engram DRAM / +Engram CXL) and streaming tokens per request.
 
 All pool behaviour — tier latency, the optional LRU hot-row cache, and
 prefetch-window stalls — comes from the tiered EngramStore subsystem
-(src/repro/pool/store.py); the engine just charges what the store reports.
+(src/repro/pool/store.py); the runtime steps the engine one admit+decode
+wave at a time and routes every token to its request's handle.
 
     PYTHONPATH=src python examples/serve_pooled.py [--requests 8]
     # paper §6 rescue, end-to-end: RDMA backing tier + DRAM hot-row cache
@@ -17,7 +19,10 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.launch.serve import main as serve_main
+from repro.configs.base import SpecConfig
+from repro.launch.serve import run_compare, with_store
+from repro.launch.train import reduced_config
+from repro.serving import EngramRuntime, Workload
 
 
 def main():
@@ -39,31 +44,62 @@ def main():
     if args.admission != "lru" and not args.cache_rows:
         ap.error("--admission needs --cache-rows (the policy gates inserts "
                  "into the hot-row cache)")
+    if args.cache_rows and not args.pool:
+        ap.error("--cache-rows needs --pool (the cache fronts a backing "
+                 "tier; compare mode runs fixed variants)")
+    if args.speculate and not args.pool:
+        ap.error("--speculate needs --pool (compare mode runs the fixed "
+                 "Table 2 variants; speculation would change all three)")
     requests = args.requests if args.requests is not None \
         else (12 if args.speculate else 8)
-    argv = ["--arch", "deepseek-7b", "--reduced",
-            "--requests", str(requests),
-            "--max-new", str(args.max_new),
-            "--max-len", "64"]
+
+    cfg = reduced_config("deepseek-7b")
+    if args.cache_rows:
+        cfg = with_store(cfg, cache_rows=args.cache_rows,
+                         admission=args.admission)
+    spec = SpecConfig(proposer="ngram") if args.speculate else None
+    # repeat traffic from a hot prompt under --speculate: replayed greedy
+    # continuations are what the n-gram proposer accepts on (unique-random
+    # traffic would honestly show ~0% acceptance), and a narrow batch
+    # keeps replays *behind* the first request instead of in cold lockstep
+    workload = Workload(requests=requests, max_new=args.max_new,
+                        prompt_pool=1 if args.speculate else 0)
+    max_batch = 2 if args.speculate else 4
+
+    if args.pool is None:
+        run_compare(cfg, requests=requests, max_new=args.max_new,
+                    max_batch=max_batch, max_len=64)
+        return 0
+
+    # single-pool run, driven by hand to show the lifecycle surface:
+    # submit -> handles, step -> TokenEvents, per-handle token streams
+    rt = EngramRuntime(cfg, pool=args.pool, max_batch=max_batch,
+                       max_len=64, spec=spec)
+    handles = [rt.submit(list(spec_.prompt), spec_.max_new)
+               for spec_ in workload.build(cfg.vocab_size)]
+    if handles:
+        first = handles[0]
+        print(f"request {first.rid} streams:",
+              " ".join(str(t) for t in first.stream()))
+    stats = rt.drain()                   # finish the rest
+    print(f"pool={args.pool}: {stats.generated_tokens} tokens "
+          f"from {stats.requests_completed} requests = "
+          f"{stats.tokens_per_s:.1f} tok/s "
+          f"(stall {stats.stall_s * 1e3:.1f} ms, "
+          f"mean TTFT {stats.mean_ttft_s * 1e3:.1f} ms)")
     if args.speculate:
-        # repeat traffic from a hot prompt: replayed greedy continuations
-        # are what the n-gram proposer accepts on (a unique-random
-        # workload would honestly show ~0% acceptance), and a narrow
-        # batch keeps replays *behind* the first request instead of in
-        # cold lockstep beside it
-        argv += ["--speculate", "--prompt-pool", "1", "--max-batch", "2"]
-    else:
-        argv += ["--max-batch", "4"]
-    if args.pool:
-        argv += ["--pool", args.pool, "--cache-rows", str(args.cache_rows)]
-        if args.cache_rows:
-            argv += ["--admission", args.admission]
-    else:
-        if args.cache_rows:
-            ap.error("--cache-rows needs --pool (the cache fronts a "
-                     "backing tier; compare mode runs fixed variants)")
-        argv += ["--compare"]
-    return serve_main(argv)
+        print(f"speculate: acceptance={stats.acceptance_rate:.3f} "
+              f"({stats.accepted_tokens}/{stats.proposed_tokens} drafts)")
+    s = rt.store.stats()
+    print(f"store[{s.tier}]: {s.segments} segments, "
+          f"hit_rate={s.hit_rate:.3f} "
+          f"(cache={s.cache_rows} rows @ {s.cache_tier}), "
+          f"hidden {s.hidden_waves}/{s.waves} waves")
+    if s.spec_waves:
+        print(f"spec-prefetch: window={s.spec_window_steps:.2f} decode "
+              f"steps (measured), wasted={s.wasted_prefetch_rate:.3f} "
+              f"of segments")
+    return 0
 
 
 if __name__ == "__main__":

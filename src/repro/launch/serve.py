@@ -1,24 +1,21 @@
-"""Serving driver: batched requests through the continuous-batching engine.
+"""Serving driver: the `serving.serve(cfg, workload, ...)` API as a CLI.
 
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \
         --requests 16 --max-new 16 --pool CXL
 
 Compares pools with --compare (baseline / +Engram(DRAM) / +Engram(CXL)),
-the Table 2 experiment shape.
+the Table 2 experiment shape. `--replicas N` serves the same workload from
+a Router fleet sharing one hot-row cache (the Table 3 DP shape).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import sys
-import time
-
-import numpy as np
 
 from ..configs.base import SpecConfig, StoreConfig, get_config
-from ..models.model import init_params
 from ..models.transformer import RunFlags
-from ..serving import Engine
+from ..serving import Workload, serve
 from .train import reduced_config
 
 
@@ -37,38 +34,45 @@ def run_once(cfg, *, requests: int, max_new: int, pool, params=None,
              max_batch: int = 8, max_len: int = 256, seed: int = 0,
              warmup: bool = False, emulate_step_s=None, cache_rows: int = 0,
              zipf_alpha: float = 0.0, admission: str = "lru",
-             spec: SpecConfig = None, prompt_pool: int = 0):
+             spec: SpecConfig = None, prompt_pool: int = 0,
+             replicas: int = 1, policy: str = "round_robin",
+             shared_cache: bool = True):
+    """One workload drive through `serving.serve` (kept as the stable
+    knob-level entry the benchmarks call). Returns (frontend, stats):
+    the frontend is an `EngramRuntime` (or a `Router` for replicas>1)."""
     # deployment default: the §Perf-validated decode path (bf16 scores —
     # numerically equivalent per tests/test_perf_flags.py, ~7x less decode
     # cache traffic). The dry-run baselines keep RunFlags() defaults.
     flags = RunFlags(attn_bf16_scores=True)
     if cache_rows:
         cfg = with_store(cfg, cache_rows=cache_rows, admission=admission)
-    eng = Engine(cfg, params=params, flags=flags, max_batch=max_batch,
-                 max_len=max_len, pool=pool, seed=seed,
-                 emulate_step_s=emulate_step_s, spec=spec)
-    if warmup:
-        eng.warmup()
-    rng = np.random.RandomState(seed)
-    for r in range(requests):
-        # prompt repetition model: a pool of N hot prompts means requests
-        # replay earlier ones — greedy continuations repeat verbatim, the
-        # regime where both the hot-row cache and speculation pay off
-        pr = int(rng.randint(prompt_pool)) if prompt_pool else r
-        plen = 4 + (pr * 7) % 20
-        if zipf_alpha:
-            # Zipf-skewed token stream (the paper's n-gram reuse model) —
-            # hot prompts repeat, which is what a hot-row cache feeds on
-            from ..pool.cache import zipf_keys
-            toks = 1 + zipf_keys(plen, cfg.vocab_size - 1,
-                                 alpha=zipf_alpha, seed=seed * 1000 + pr)
-            eng.submit([int(t) for t in toks], max_new=max_new)
-        else:
-            prng = np.random.RandomState(seed * 1000 + pr)
-            eng.submit(list(prng.randint(1, cfg.vocab_size, size=plen)),
-                       max_new=max_new)
-    stats = eng.run()
-    return eng, stats
+    workload = Workload(requests=requests, max_new=max_new,
+                        prompt_pool=prompt_pool, zipf_alpha=zipf_alpha,
+                        seed=seed)
+    res = serve(cfg, workload, pool=pool, replicas=replicas, policy=policy,
+                shared_cache=shared_cache, warmup=warmup, params=params,
+                flags=flags, max_batch=max_batch, max_len=max_len, seed=seed,
+                emulate_step_s=emulate_step_s, spec=spec)
+    return res.frontend, res.stats
+
+
+def run_compare(cfg, *, requests: int, max_new: int, max_batch: int = 8,
+                max_len: int = 256):
+    """Table 2 shape: baseline (no engram) vs +Engram(DRAM) vs
+    +Engram(CXL), printed one row per variant. The single source of the
+    compare experiment — the CLI and examples both call it."""
+    base_cfg = dataclasses.replace(cfg, engram=None)
+    rows = []
+    for name, c, pool in [("baseline", base_cfg, None),
+                          ("+Engram (DRAM)", cfg, "DRAM"),
+                          ("+Engram (CXL)", cfg, "CXL")]:
+        _, stats = run_once(c, requests=requests, max_new=max_new,
+                            pool=pool, max_batch=max_batch, max_len=max_len)
+        rows.append((name, stats))
+        print(f"{name:18s} {stats.tokens_per_s:8.1f} tok/s "
+              f"(stall {stats.stall_s * 1e3:6.1f} ms, "
+              f"{stats.decode_steps} decode steps)")
+    return rows
 
 
 def main(argv=None) -> int:
@@ -103,6 +107,16 @@ def main(argv=None) -> int:
                     help="draw prompts from a pool of N distinct prompts "
                          "(repeat traffic: the n-gram proposer's and the "
                          "hot-row cache's steady state); 0 = all unique")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind a Router (DP serving; "
+                         ">1 shares one hot-row cache across the fleet)")
+    ap.add_argument("--policy", default="round_robin",
+                    choices=["round_robin", "least_loaded", "cache_affinity"],
+                    help="router dispatch policy (--replicas > 1)")
+    ap.add_argument("--private-cache", action="store_true",
+                    help="give each replica its own hot-row cache instead "
+                         "of the shared one (the baseline the shared "
+                         "cache is measured against)")
     ap.add_argument("--compare", action="store_true",
                     help="run baseline / +Engram(DRAM) / +Engram(CXL)")
     args = ap.parse_args(argv)
@@ -110,10 +124,12 @@ def main(argv=None) -> int:
         ap.error("--admission needs --cache-rows > 0 (the policy gates "
                  "inserts into the hot-row cache)")
     if args.compare and (args.speculate or args.cache_rows
-                         or args.zipf_alpha or args.prompt_pool):
+                         or args.zipf_alpha or args.prompt_pool
+                         or args.replicas > 1):
         ap.error("--compare runs fixed Table 2 variants; it does not "
                  "honour --speculate/--cache-rows/--zipf-alpha/"
-                 "--prompt-pool — run those as single-pool invocations")
+                 "--prompt-pool/--replicas — run those as single-pool "
+                 "invocations")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     spec = SpecConfig(proposer=args.spec_proposer,
@@ -126,15 +142,31 @@ def main(argv=None) -> int:
                               cache_rows=args.cache_rows,
                               admission=args.admission, spec=spec,
                               zipf_alpha=args.zipf_alpha,
-                              prompt_pool=args.prompt_pool)
-        print(f"pool={args.pool or 'local'}: {stats.generated_tokens} tokens "
+                              prompt_pool=args.prompt_pool,
+                              replicas=args.replicas, policy=args.policy,
+                              shared_cache=not args.private_cache)
+        label = f"pool={args.pool or 'local'}"
+        if args.replicas > 1:
+            label += f" x{args.replicas} replicas ({args.policy})"
+        print(f"{label}: {stats.generated_tokens} tokens "
               f"in {stats.wall_s:.2f}s = {stats.tokens_per_s:.1f} tok/s "
               f"(stall {stats.stall_s * 1e3:.1f} ms)")
         if args.speculate:
             print(f"speculate: acceptance={stats.acceptance_rate:.3f} "
                   f"({stats.accepted_tokens}/{stats.proposed_tokens} drafts, "
                   f"{stats.spec_waves} verify waves)")
-        if eng.store is not None and args.pool:
+        if args.replicas > 1:
+            rs = eng.stats()
+            for name, st in rs.per_replica.items():
+                print(f"  {name}: {st.generated_tokens} tokens, "
+                      f"{st.prefills} requests, "
+                      f"stall {st.stall_s * 1e3:.1f} ms")
+            if rs.cache is not None:
+                c = rs.cache
+                print(f"shared-cache: hit_rate={c.hit_rate:.3f} "
+                      f"({c.hits}/{c.hits + c.misses} unique-key accesses, "
+                      f"{c.rows}/{c.capacity_rows} rows)")
+        elif eng.store is not None and args.pool:
             s = eng.store.stats()
             print(f"store[{s.tier}]: {s.segments} segments, "
                   f"hit_rate={s.hit_rate:.3f} "
@@ -147,19 +179,8 @@ def main(argv=None) -> int:
                       f"wasted={s.wasted_prefetch_rate:.3f} of segments")
         return 0
 
-    # Table 2 shape: baseline (no engram) vs +Engram(DRAM) vs +Engram(CXL)
-    base_cfg = dataclasses.replace(cfg, engram=None)
-    rows = []
-    for name, c, pool in [("baseline", base_cfg, None),
-                          ("+Engram (DRAM)", cfg, "DRAM"),
-                          ("+Engram (CXL)", cfg, "CXL")]:
-        _, stats = run_once(c, requests=args.requests, max_new=args.max_new,
-                            pool=pool, max_batch=args.max_batch,
-                            max_len=args.max_len)
-        rows.append((name, stats))
-        print(f"{name:18s} {stats.tokens_per_s:8.1f} tok/s "
-              f"(stall {stats.stall_s * 1e3:6.1f} ms, "
-              f"{stats.decode_steps} decode steps)")
+    run_compare(cfg, requests=args.requests, max_new=args.max_new,
+                max_batch=args.max_batch, max_len=args.max_len)
     return 0
 
 

@@ -9,6 +9,7 @@ logical axes, init scale). From one def-tree we derive:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -70,11 +71,16 @@ def _init_leaf(d: ParamDef, key) -> jax.Array:
 
 
 def tree_init(defs, seed: int = 0) -> Any:
-    """Materialize params; per-leaf key derived from tree path (stable)."""
+    """Materialize params; per-leaf key derived from tree path (stable).
+
+    The path hash must be stable *across processes* (Python's ``hash`` on
+    strings is salted per interpreter): serving replicas built in separate
+    processes, CI smoke runs, and cached-vs-fresh comparisons all assume
+    ``tree_init(defs, seed)`` is one function of its arguments."""
     base = jax.random.PRNGKey(seed)
 
     def init_one(path, d):
-        h = np.uint32(abs(hash(_path_str(path))) % (2**31))
+        h = np.uint32(zlib.crc32(_path_str(path).encode()) % (2**31))
         return _init_leaf(d, jax.random.fold_in(base, h))
 
     return jax.tree_util.tree_map_with_path(init_one, defs, is_leaf=is_def)

@@ -3,12 +3,13 @@ from .feasibility import (Feasibility, ServingPoint, check, check_all_tiers,
                           paper_case_study, prefetch_window_s,
                           required_bandwidth_Bps)
 from .simulator import (cached_read_latency_s, latency_sweep,
-                        read_latency_s, rdma_rescue_sweep,
-                        scalability_table, throughput_table)
+                        measured_scalability, read_latency_s,
+                        rdma_rescue_sweep, scalability_table,
+                        throughput_table)
 from .cost import CostRow, breakeven_nodes, cost_table, local_cost, pool_cost
 from .store import (CachedStore, EngramStore, LocalStore, PrefetchHandle,
                     StoreStats, STRATEGY_TIERS, TableFetcher, TierStore,
                     make_store, segment_keys, store_for_strategy)
-from .cache import (FrequencySketch, LRUHotRowCache, TinyLFUAdmission,
-                    zipf_keys)
+from .cache import (FrequencySketch, LRUHotRowCache, SharedCache,
+                    SharedCacheStats, TinyLFUAdmission, zipf_keys)
 from .scheduler import PrefetchScheduler, SpecWaveReport, WaveReport

@@ -177,6 +177,104 @@ class LRUHotRowCache:
         self.evictions = 0
 
 
+# ---------------------------------------------------------------------------
+# shared cache (one hot-row LRU serving several engine replicas)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SharedCacheStats:
+    """Aggregate + per-replica accounting for a ``SharedCache``."""
+    capacity_rows: int
+    rows: int
+    hits: int
+    misses: int
+    evictions: int
+    per_view: dict
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class _SharedCacheView:
+    """One replica's handle onto a ``SharedCache``: forwards every wave to
+    the shared LRU (so any replica's fetch warms rows for all of them) while
+    keeping per-replica hit/miss totals. Duck-types ``LRUHotRowCache`` for
+    ``CachedStore`` (``access_wave`` / ``capacity_rows`` / ``hit_rate``)."""
+
+    def __init__(self, shared: "SharedCache", name):
+        self.shared = shared
+        self.name = name
+        self.total_hits = 0
+        self.total_misses = 0
+        self.waves = 0
+
+    @property
+    def capacity_rows(self) -> int:
+        return self.shared.cache.capacity_rows
+
+    def __len__(self) -> int:
+        return len(self.shared.cache)
+
+    def __contains__(self, key: int) -> bool:
+        return key in self.shared.cache
+
+    def access_wave(self, keys) -> WaveAccess:
+        wave = self.shared.cache.access_wave(keys)
+        self.total_hits += wave.hits
+        self.total_misses += wave.misses
+        self.waves += 1
+        return wave
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.total_hits + self.total_misses
+        return self.total_hits / n if n else 0.0
+
+    def reset_stats(self) -> None:
+        self.total_hits = 0
+        self.total_misses = 0
+        self.waves = 0
+
+
+class SharedCache:
+    """One hot-row cache shared by N front-ends (the DP case: several
+    engine replicas multiplexing one pool).
+
+    Each replica takes a ``view(name)`` and mounts it as the ``cache`` of
+    its own ``CachedStore``: rows any replica pulls from the backing tier
+    become hits for every other replica, which is exactly the pooled-tier
+    win a private per-replica cache cannot capture. ``stats()`` reports the
+    aggregate hit rate plus the per-replica split.
+    """
+
+    def __init__(self, capacity_rows: int, admission=None):
+        self.cache = LRUHotRowCache(capacity_rows, admission=admission)
+        self.views: dict = {}
+
+    @property
+    def capacity_rows(self) -> int:
+        return self.cache.capacity_rows
+
+    def view(self, name) -> _SharedCacheView:
+        assert name not in self.views, f"duplicate cache view {name!r}"
+        v = _SharedCacheView(self, name)
+        self.views[name] = v
+        return v
+
+    def stats(self) -> SharedCacheStats:
+        return SharedCacheStats(
+            capacity_rows=self.cache.capacity_rows,
+            rows=len(self.cache),
+            hits=self.cache.total_hits,
+            misses=self.cache.total_misses,
+            evictions=self.cache.evictions,
+            per_view={n: {"hits": v.total_hits, "misses": v.total_misses,
+                          "waves": v.waves, "hit_rate": v.hit_rate}
+                      for n, v in self.views.items()})
+
+
 def zipf_keys(n: int, vocab: int, *, alpha: float = 1.2,
               seed: int = 0) -> np.ndarray:
     """Zipf-distributed key stream over [0, vocab) — the paper's reuse

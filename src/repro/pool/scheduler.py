@@ -36,6 +36,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Optional, Sequence
 
+import numpy as np
+
 from ..configs.base import EngramConfig
 from .store import EngramStore, PrefetchHandle
 
@@ -97,6 +99,9 @@ class SpecWaveReport:
     step_s: float                          # verify-pass latency estimate
     layer_frac: float                      # first Engram layer / n_layers
     charged: bool = False
+    # optional per-slot key streams: [position] -> {slot: unique keys,
+    # concatenated over layers} (layer offsets keep them distinct)
+    slot_keys: Optional[list[dict]] = None
 
     @property
     def n_positions(self) -> int:
@@ -166,7 +171,7 @@ class PrefetchScheduler:
     # ------------------------------------------------------- speculation
 
     def speculative_wave(self, keys_by_pos, step_latency_s: float,
-                         fetch=None) -> SpecWaveReport:
+                         fetch=None, slot_keys_by_pos=None) -> SpecWaveReport:
         """Issue the prefetch for a whole speculated block.
 
         ``keys_by_pos``: one ``keys_per_layer`` entry per block position
@@ -179,6 +184,13 @@ class PrefetchScheduler:
         ``step()``'s per-position contract: a per-layer list or a fused
         callable for that position), or a single fused callable returning
         the whole block's ``rows[position][layer]`` nest.
+
+        ``slot_keys_by_pos`` (optional, measured mode): per position a
+        ``{slot: keys_per_layer}`` mapping of the same wave split by slot,
+        so ``charge_spec`` can attribute accepted vs. wasted prefetch per
+        slot instead of by the batch-max accepted prefix. Counting only —
+        the fused ``keys_by_pos`` stream remains what is actually fetched
+        and priced.
 
         Stats are NOT charged here — verification hasn't happened yet.
         Call ``charge_spec(report, n_keep)`` afterwards.
@@ -218,13 +230,24 @@ class PrefetchScheduler:
             handles.append(per_layer)
             overshoot.append(over)
             n_segments.append(nseg)
+        slot_keys = None
+        if slot_keys_by_pos is not None:
+            assert len(slot_keys_by_pos) == m, (len(slot_keys_by_pos), m)
+            slot_keys = [
+                {slot: np.unique(np.concatenate(
+                    [np.asarray(k, np.int64).reshape(-1)
+                     for k in per_layer]))
+                 for slot, per_layer in by_slot.items()}
+                for by_slot in slot_keys_by_pos]
         return SpecWaveReport(handles=handles, overshoot_s=overshoot,
                               n_segments=n_segments, latency_s=lat_max,
                               step_s=step_latency_s,
-                              layer_frac=min(self.layers) / self.n_layers)
+                              layer_frac=min(self.layers) / self.n_layers,
+                              slot_keys=slot_keys)
 
     def charge_spec(self, report: SpecWaveReport, n_keep: int,
-                    tokens_emitted: Optional[int] = None) -> float:
+                    tokens_emitted: Optional[int] = None,
+                    n_keep_by_slot: Optional[dict] = None) -> float:
         """Settle a speculative wave after verification.
 
         ``n_keep``: positions that executed and survived (accepted drafts
@@ -241,6 +264,20 @@ class PrefetchScheduler:
         over slots (per-slot acceptance varies; ``n_keep`` is the batch
         max). Defaults to ``n_keep`` for single-slot/analytic callers.
 
+        ``n_keep_by_slot``: per-slot surviving-position counts. With the
+        wave's ``slot_keys`` (from ``slot_keys_by_pos``) the
+        accepted/wasted split becomes per-slot-accurate: at position *j*
+        only the keys some *surviving* slot (``keep > j``) fetched count
+        as accepted; the rest of the position's fused unique stream is
+        wasted — the coarse batch-max split calls a whole position
+        accepted if any slot kept it, systematically under-reporting
+        waste on mixed-acceptance batches. The aggregates stay dedup-true
+        (unions, not per-slot sums); ``StoreStats.slot_accepted/
+        slot_wasted`` additionally record the per-slot attribution, which
+        double-counts keys shared between slots. The wave stall stays the
+        batch-max formula (the batch executes as one block — that part is
+        physics, not accounting).
+
         Returns the stall and records the wave's measured window depth in
         emitted-token decode steps: the deepest accepted position's lead
         time (j·t_tok + first-layer window) over the realized per-token
@@ -251,8 +288,30 @@ class PrefetchScheduler:
         m = report.n_positions
         n_keep = max(1, min(int(n_keep), m))
         stall = max(report.overshoot_s[:n_keep])
-        accepted_seg = sum(report.n_segments[:n_keep])
-        wasted_seg = sum(report.n_segments[n_keep:])
+        per_slot = None
+        if n_keep_by_slot is not None and report.slot_keys is not None:
+            keeps = {slot: max(1, min(int(kp), m))
+                     for slot, kp in n_keep_by_slot.items()}
+            per_slot = {
+                slot: (sum(report.slot_keys[j][slot].size
+                           for j in range(kp)),
+                       sum(report.slot_keys[j][slot].size
+                           for j in range(kp, m)))
+                for slot, kp in keeps.items()}
+            # dedup-true aggregate: position j's accepted keys are the
+            # union over slots still alive there; the remainder of the
+            # fused unique stream was fetched only for rejected drafts
+            accepted_seg = 0
+            for j in range(m):
+                alive = [report.slot_keys[j][s]
+                         for s, kp in keeps.items() if kp > j]
+                if alive:
+                    accepted_seg += int(np.unique(
+                        np.concatenate(alive)).size)
+            wasted_seg = sum(report.n_segments) - accepted_seg
+        else:
+            accepted_seg = sum(report.n_segments[:n_keep])
+            wasted_seg = sum(report.n_segments[n_keep:])
         # measured window depth, in emitted-token steps (see StoreStats)
         window_wall = (report.layer_frac * report.step_s
                        + (n_keep - 1) * report.step_s / m)
@@ -262,5 +321,6 @@ class PrefetchScheduler:
         self.store.note_spec_wave(stall, stall == 0.0, tokens=tokens,
                                   depth_steps=depth_steps,
                                   accepted_segments=accepted_seg,
-                                  wasted_segments=wasted_seg)
+                                  wasted_segments=wasted_seg,
+                                  per_slot=per_slot)
         return stall

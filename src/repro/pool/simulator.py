@@ -121,6 +121,31 @@ def throughput_table(ecfg: EngramConfig, point: ServingPoint,
     return rows
 
 
+def measured_scalability(cfg, workload, *, dps=(1, 2), pool: str = "CXL",
+                         policy: str = "round_robin", **engine_kwargs) -> list:
+    """Measured counterpart of ``scalability_table``: the same Table 3
+    DP-scaling question answered by actually serving ``workload`` from a
+    Router fleet (serving/api.serve) instead of the analytic contention
+    model. One row per DP degree: aggregate tokens, the fleet wall clock
+    (slowest replica — replicas model parallel hardware), and the shared
+    hot-row cache hit rate when the config carries cache rows."""
+    from ..serving import Router, serve
+    rows = []
+    for dp in dps:
+        res = serve(cfg, workload, pool=pool, replicas=dp, policy=policy,
+                    **engine_kwargs)
+        row = {"dp": dp, "tokens": res.stats.generated_tokens,
+               "wall_s": res.stats.wall_s,
+               "tokens_per_s": res.stats.tokens_per_s,
+               "stall_s": res.stats.stall_s, "cache_hit_rate": 0.0}
+        if isinstance(res.frontend, Router):
+            row["cache_hit_rate"] = res.frontend.stats().cache_hit_rate
+        elif res.store_stats() is not None:
+            row["cache_hit_rate"] = res.store_stats().hit_rate
+        rows.append(row)
+    return rows
+
+
 def scalability_table(ecfg: EngramConfig, point: ServingPoint,
                       dps=(1, 2), nnodes=(1, 2),
                       engram_compute_frac: float = 0.07,

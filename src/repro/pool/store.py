@@ -108,6 +108,14 @@ class StoreStats:
     accepted_segments: int = 0         # prefetched segments that were used
     wasted_segments: int = 0           # prefetched for a rejected position
     spec_depth_sum: float = 0.0        # accumulated measured window depth
+    # per-slot attribution of the speculative split (slot -> segments).
+    # Counted per slot independently, so a key shared by two slots in one
+    # fused wave is attributed to both — the sums can exceed the
+    # accepted/wasted aggregates above, which stay dedup-true (the
+    # scheduler splits each position's fused unique stream by the union
+    # of keys the *surviving* slots actually fetched).
+    slot_accepted: dict = dataclasses.field(default_factory=dict)
+    slot_wasted: dict = dataclasses.field(default_factory=dict)
 
     @property
     def hit_rate(self) -> float:
@@ -211,11 +219,13 @@ class _StoreBase:
 
     def note_spec_wave(self, stall_s: float, hidden: bool, tokens: int,
                        depth_steps: float, accepted_segments: int,
-                       wasted_segments: int) -> None:
+                       wasted_segments: int, per_slot=None) -> None:
         """Account one verified speculative wave: ``tokens`` were emitted,
         the wave's deepest accepted position enjoyed ``depth_steps`` of
         measured lookahead, and the prefetched segments split into used
-        vs. mis-speculated (fetched for a rejected draft)."""
+        vs. mis-speculated (fetched for a rejected draft). ``per_slot``
+        (optional): ``{slot: (accepted_segments, wasted_segments)}`` — the
+        per-slot attribution of that split."""
         self.note_wave(stall_s, hidden)
         s = self._stats
         s.spec_waves += 1
@@ -223,6 +233,10 @@ class _StoreBase:
         s.spec_depth_sum += float(depth_steps)
         s.accepted_segments += int(accepted_segments)
         s.wasted_segments += int(wasted_segments)
+        if per_slot:
+            for slot, (acc, waste) in per_slot.items():
+                s.slot_accepted[slot] = s.slot_accepted.get(slot, 0) + int(acc)
+                s.slot_wasted[slot] = s.slot_wasted.get(slot, 0) + int(waste)
 
     def stats(self) -> StoreStats:
         return self._stats
@@ -344,13 +358,20 @@ STRATEGY_TIERS: dict[str, Optional[str]] = {
 
 
 def make_store(ecfg: EngramConfig, tier: TierSpec | str | None,
-               store_cfg=None) -> EngramStore:
+               store_cfg=None, cache=None) -> EngramStore:
     """Build the store for a backing tier, honouring ``ecfg.store`` knobs
-    (cache capacity / tier / admission). ``tier=None`` -> LocalStore."""
+    (cache capacity / tier / admission). ``tier=None`` -> LocalStore.
+
+    ``cache``: mount an externally-owned hot-row cache (e.g. a
+    ``SharedCache.view()`` shared across engine replicas) instead of a
+    private LRU — the DP front-end the router builds."""
     scfg = store_cfg if store_cfg is not None else ecfg.store
     if tier is None:
         return LocalStore(ecfg)
     base = TierStore(ecfg, tier)
+    if cache is not None:
+        tier_name = scfg.cache_tier if scfg is not None else "DRAM"
+        return CachedStore(base, cache_tier=tier_name, cache=cache)
     if scfg is not None and scfg.cache_rows > 0:
         admission = getattr(scfg, "admission", "lru")
         assert admission in ("lru", "tinylfu"), admission

@@ -1,2 +1,6 @@
 from .engine import Engine, EngineStats, Request
 from .slots import select_slots, update_slots
+from .runtime import EngramRuntime, RequestHandle, TokenEvent
+from .router import POLICIES, Router, RouterStats
+from .workload import RequestSpec, Workload
+from .api import ServeResult, serve

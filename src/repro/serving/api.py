@@ -1,0 +1,89 @@
+"""`serve(cfg, workload, ...)`: the one config-driven serving entry point.
+
+Every driver — the `launch/serve.py` CLI, `examples/serve_pooled.py`, the
+benchmark suite, and the simulator's measured DP scenario — used to build
+its own engine + traffic loop; they now all call this. A `Workload`
+(serving/workload.py) describes the traffic, `replicas` decides between a
+single `EngramRuntime` and a `Router` fleet, and the arrival process is
+honoured by interleaving submission with `step()` — paced workloads join
+mid-flight, the way real traffic meets a pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+from .engine import EngineStats
+from .router import Router
+from .runtime import EngramRuntime
+from .workload import Workload
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Outcome of one `serve()` drive."""
+    frontend: Union[EngramRuntime, Router]
+    handles: list                      # per request, submission order
+    stats: EngineStats                 # aggregate over replicas
+
+    @property
+    def router(self) -> Router:
+        assert isinstance(self.frontend, Router), "single-replica run"
+        return self.frontend
+
+    @property
+    def runtime(self) -> EngramRuntime:
+        assert isinstance(self.frontend, EngramRuntime), "router run"
+        return self.frontend
+
+    def store_stats(self):
+        """Single replica: its `StoreStats` (or None). Router: the
+        per-replica dict (shared-cache stats live on `router.stats()`)."""
+        if isinstance(self.frontend, Router):
+            return self.frontend.store_stats()
+        store = self.frontend.store
+        return store.stats() if store is not None else None
+
+
+def _engines(frontend) -> list:
+    if isinstance(frontend, Router):
+        return [rt.engine for rt in frontend.replicas]
+    return [frontend.engine]
+
+
+def serve(cfg, workload: Workload, *, pool=None, replicas: int = 1,
+          policy: str = "round_robin", shared_cache: bool = True,
+          warmup: bool = False, **engine_kwargs) -> ServeResult:
+    """Drive `workload` against `cfg` served from `pool`.
+
+    ``replicas=1`` builds an `EngramRuntime`; ``replicas>1`` a `Router`
+    (with `policy` dispatch and, when the config carries cache rows, one
+    `shared_cache` across the fleet). All other kwargs reach `Engine`.
+    Requests are submitted when their `arrival_step` comes up, interleaved
+    with `step()`s, then the fleet is drained.
+    """
+    specs = workload.build(cfg.vocab_size)
+    if replicas > 1:
+        frontend: Union[EngramRuntime, Router] = Router(
+            cfg, replicas=replicas, pool=pool, policy=policy,
+            shared_cache=shared_cache, **engine_kwargs)
+    else:
+        frontend = EngramRuntime(cfg, pool=pool, **engine_kwargs)
+    if warmup:
+        for eng in _engines(frontend):
+            eng.warmup()
+    handles = []
+    i, step_no = 0, 0
+    while i < len(specs) or frontend.busy:
+        while i < len(specs) and specs[i].arrival_step <= step_no:
+            handles.append(frontend.submit(list(specs[i].prompt),
+                                           specs[i].max_new))
+            i += 1
+        if frontend.busy:
+            frontend.step()
+        step_no += 1
+    if isinstance(frontend, Router):
+        stats = frontend.stats().aggregate
+    else:
+        stats = frontend.stats
+    return ServeResult(frontend=frontend, handles=handles, stats=stats)

@@ -1,5 +1,12 @@
 """Continuous-batching serving engine with Engram prefetch (mini-SGLang).
 
+The engine owns the *wave primitives* — `_admit` (prefill into free
+slots), `_decode_wave`, `_spec_wave` — each returning per-request token
+events; the request-lifecycle surface (stepwise `step()`, streaming,
+`cancel()`, multi-replica routing) lives above them in
+`serving/runtime.py` / `serving/router.py`, and `run()` is a thin drain
+loop over `runtime().step()`.
+
 Maps the paper's §4.3 integration onto a self-contained JAX engine:
 
   * Initialization — the engine owns the model params; the Engram tables
@@ -73,6 +80,16 @@ class Request:
     submitted_s: float = 0.0
     first_token_s: float = 0.0
     done_s: float = 0.0
+    status: str = "queued"           # queued | running | done | cancelled
+
+
+def _rate(num: float, den: float) -> float:
+    """Division-safe rate: fresh/reset stats report 0.0, never NaN/inf —
+    guards against den being 0, 0.0, NaN, or negative timer noise."""
+    den = float(den)
+    if not (den > 0.0):               # catches 0, NaN, and negatives
+        return 0.0
+    return float(num) / den
 
 
 @dataclasses.dataclass
@@ -83,6 +100,10 @@ class EngineStats:
     wall_s: float = 0.0
     stall_s: float = 0.0
     emu_time_s: float = 0.0          # accumulated emulated step + stall time
+    # --- request lifecycle ------------------------------------------------
+    requests_completed: int = 0
+    requests_cancelled: int = 0
+    ttft_s_sum: float = 0.0          # summed submit -> first-token latency
     # --- speculation ------------------------------------------------------
     spec_waves: int = 0              # verify waves run
     proposed_tokens: int = 0         # drafts proposed (k per live slot-wave)
@@ -90,18 +111,44 @@ class EngineStats:
 
     @property
     def tokens_per_s(self) -> float:
-        return self.generated_tokens / self.wall_s if self.wall_s else 0.0
+        return _rate(self.generated_tokens, self.wall_s)
 
     @property
     def tokens_per_s_emulated(self) -> float:
         """Throughput at the emulated operating point (paper-scale steps)."""
-        return (self.generated_tokens / self.emu_time_s
-                if self.emu_time_s else 0.0)
+        return _rate(self.generated_tokens, self.emu_time_s)
 
     @property
     def acceptance_rate(self) -> float:
-        return (self.accepted_tokens / self.proposed_tokens
-                if self.proposed_tokens else 0.0)
+        return _rate(self.accepted_tokens, self.proposed_tokens)
+
+    @property
+    def tokens_per_step(self) -> float:
+        return _rate(self.generated_tokens, self.decode_steps)
+
+    @property
+    def requests_per_s(self) -> float:
+        return _rate(self.requests_completed, self.wall_s)
+
+    @property
+    def mean_ttft_s(self) -> float:
+        """Mean submit -> first-token latency over admitted requests."""
+        return _rate(self.ttft_s_sum, self.prefills)
+
+    def merge(self, other: "EngineStats") -> "EngineStats":
+        """Aggregate another replica's counters into this one (the router's
+        fleet view). Counters add; the clock quantities ``wall_s`` and
+        ``emu_time_s`` take the max — replicas model parallel hardware
+        sharing one clock, not a serial loop (summing them would halve
+        the fleet's reported throughput per doubling of DP)."""
+        for f in dataclasses.fields(self):
+            if f.name in ("wall_s", "emu_time_s"):
+                setattr(self, f.name,
+                        max(getattr(self, f.name), getattr(other, f.name)))
+            else:
+                setattr(self, f.name,
+                        getattr(self, f.name) + getattr(other, f.name))
+        return self
 
 
 def _bucket(n: int, bucket: int) -> int:
@@ -115,16 +162,25 @@ class Engine:
                  pool: Optional[str] = None, seed: int = 0,
                  step_latency_hint_s: Optional[float] = None,
                  emulate_step_s: Optional[float] = None,
-                 spec: Optional[SpecConfig] = None, proposer=None):
+                 spec: Optional[SpecConfig] = None, proposer=None,
+                 store=None, name: Optional[str] = None,
+                 rid_start: int = 0):
         """``emulate_step_s``: evaluate the pool stalls at a production
         operating point (ms-scale decode steps) instead of this host's
         CPU step times — stalls are then accounted in ``emu_time_s``
         rather than slept (Table 2/3 emulation).
 
         ``spec``: run in speculate mode (overrides ``cfg.spec``);
-        ``proposer``: inject a custom draft proposer (tests/benches)."""
+        ``proposer``: inject a custom draft proposer (tests/benches);
+        ``store``: inject an externally-built ``EngramStore`` (e.g. a
+        ``CachedStore`` whose hot-row cache is shared across replicas —
+        the router's DP front-end) instead of building one from the
+        config; ``name``: replica label for router stats; ``rid_start``:
+        base of this engine's request-id space (the router gives each
+        replica a disjoint range so fleet-wide rids stay unique)."""
         assert not cfg.is_encoder, "serving needs a decoder"
         self.cfg = cfg
+        self.name = name
         self.flags = flags
         self.max_batch = max_batch
         self.max_len = max_len
@@ -145,7 +201,8 @@ class Engine:
         self.scheduler = None
         self._fetchers = None
         if self.has_engram:
-            self.store = make_store(cfg.engram, pool)
+            self.store = store if store is not None \
+                else make_store(cfg.engram, pool)
             self.scheduler = PrefetchScheduler(self.store, cfg.engram,
                                                layers=cfg.engram_layers(),
                                                n_layers=cfg.n_layers)
@@ -198,8 +255,10 @@ class Engine:
         self.tokens = jnp.zeros((max_batch,), jnp.int32)
         self.queue: deque[Request] = deque()
         self.done: dict[int, Request] = {}
+        self.cancelled: dict[int, Request] = {}
         self.stats = EngineStats()
-        self._rid = 0
+        self._rid = int(rid_start)
+        self._runtime = None
         self._step_times: list[float] = []
         if step_latency_hint_s:
             self._step_times.append(step_latency_hint_s)
@@ -213,17 +272,52 @@ class Engine:
         self.queue.append(req)
         return self._rid
 
+    @property
+    def busy(self) -> bool:
+        """Anything queued or mid-flight?"""
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def runtime(self) -> "EngramRuntime":
+        """The engine's request-lifecycle front-end (serving/runtime.py):
+        stepwise `step()`, per-request streaming, `cancel()`. One runtime
+        per engine — `run()` drives the same object, so batch and
+        lifecycle callers share handles and stats."""
+        if self._runtime is None:
+            from .runtime import EngramRuntime
+            self._runtime = EngramRuntime(engine=self)
+        return self._runtime
+
     def run(self) -> EngineStats:
-        """Process until queue empty and all slots idle."""
-        t0 = time.perf_counter()
-        while self.queue or any(s is not None for s in self.slots):
-            self._admit()
-            if self.spec is not None:
-                self._spec_wave()
-            else:
-                self._decode_wave()
-        self.stats.wall_s += time.perf_counter() - t0
-        return self.stats
+        """Process until queue empty and all slots idle — a thin drain
+        loop over the runtime's `step()` (the legacy batch entry point)."""
+        return self.runtime().drain()
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request: drop it from the queue, or free its slot
+        mid-flight. The freed slot's decode state needs no surgery — slot
+        state is only ever read for live slots, and the next `_admit`
+        scatter-writes a fresh prefill over it (`update_slots`), which is
+        exactly the rollback. Returns False if the rid already finished
+        (or was never submitted): cancelling a done request is a no-op."""
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                self._mark_cancelled(req)
+                return True
+        for slot, req in enumerate(self.slots):
+            if req is not None and req.rid == rid:
+                self.slots[slot] = None
+                if self.proposer is not None:
+                    self.proposer.end(slot)
+                self._mark_cancelled(req)
+                return True
+        return False
+
+    def _mark_cancelled(self, req: Request) -> None:
+        req.status = "cancelled"
+        req.done_s = time.perf_counter()
+        self.cancelled[req.rid] = req
+        self.stats.requests_cancelled += 1
 
     def warmup(self) -> None:
         """Trigger the prefill/decode compiles outside measured runs."""
@@ -237,7 +331,12 @@ class Engine:
 
     # ---------------------------------------------------------- prefill path
 
-    def _admit(self) -> None:
+    def _admit(self) -> list:
+        """Admit queued requests into free slots (one prefill each).
+
+        Wave primitive: returns ``(request, emitted_tokens, finished)``
+        tuples — the runtime turns them into ``TokenEvent`` streams."""
+        events = []
         free = [i for i, s in enumerate(self.slots) if s is None]
         while free and self.queue:
             slot = free.pop(0)
@@ -262,12 +361,16 @@ class Engine:
             self.tokens = self.tokens.at[slot].set(tok[0])
             req.out.append(int(tok[0]))
             req.first_token_s = time.perf_counter()
+            req.status = "running"
             self.slots[slot] = req
             self.stats.prefills += 1
             self.stats.generated_tokens += 1
+            self.stats.ttft_s_sum += req.first_token_s - req.submitted_s
             if self.proposer is not None:
                 self.proposer.begin(slot, req.prompt + req.out)
-            self._finish_if_done(slot)
+            events.append((req, [int(tok[0])], self._finish_if_done(slot),
+                           len(req.out) - 1))
+        return events
 
     # ----------------------------------------------------------- decode path
 
@@ -294,10 +397,14 @@ class Engine:
 
         return [layer_fetch(j) for j in range(len(self._fetchers))]
 
-    def _decode_wave(self) -> None:
+    def _decode_wave(self) -> list:
+        """One batched greedy-decode wave over the live slots.
+
+        Wave primitive: returns ``(request, emitted_tokens, finished)``
+        tuples (see ``_admit``)."""
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
-            return
+            return []
         t0 = time.perf_counter()
         if self.emulate_step_s is not None:
             self.stats.emu_time_s += self.emulate_step_s
@@ -328,11 +435,14 @@ class Engine:
         self.tokens = new_tok
         self._step_times.append(time.perf_counter() - t0)
         self.stats.decode_steps += 1
+        events = []
         for i in active:
             req = self.slots[i]
             req.out.append(int(new_tok[i]))
             self.stats.generated_tokens += 1
-            self._finish_if_done(i)
+            events.append((req, [int(new_tok[i])], self._finish_if_done(i),
+                           len(req.out) - 1))
+        return events
 
     # ------------------------------------------------------ speculate path
 
@@ -346,13 +456,16 @@ class Engine:
             rows.append(retrieve(e, tab, idx, self.flags.engram_strategy))
         return rows
 
-    def _spec_wave(self) -> None:
+    def _spec_wave(self) -> list:
         """One speculative wave: propose k drafts per live slot, prefetch
         the whole block's Engram window, verify in one batched pass, roll
-        back rejected tails, charge stalls for surviving positions only."""
+        back rejected tails, charge stalls for surviving positions only.
+
+        Wave primitive: returns ``(request, emitted_tokens, finished)``
+        tuples (see ``_admit``)."""
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
-            return
+            return []
         t0 = time.perf_counter()
         k = self.spec.max_draft
         m = k + 1
@@ -380,13 +493,22 @@ class Engine:
                 nl = len(self.cfg.engram_layers())
                 idx = np.asarray(self._block_idx(self.state["last_tokens"],
                                                  block_j))       # (B, m, T)
-                act = np.asarray(active)
-                keys_by_pos = [
-                    [segment_keys(e, idx[act, s:s + 1], layer_slot=j)
-                     for j in range(nl)]
+                # per-slot key streams, packed once; the fused per-layer
+                # stream the store prices is their concatenation (same
+                # order as segment_keys over idx[act]), and charge_spec
+                # uses the per-slot split to attribute accepted vs wasted
+                # prefetch to each slot's own accepted prefix
+                slot_keys_by_pos = [
+                    {i: [segment_keys(e, idx[i:i + 1, s:s + 1], layer_slot=j)
+                         for j in range(nl)]
+                     for i in active}
                     for s in range(m)]
-                spec_report = self.scheduler.speculative_wave(keys_by_pos,
-                                                              verify_s)
+                keys_by_pos = [
+                    [np.concatenate([by_slot[i][j] for i in active])
+                     for j in range(nl)]
+                    for by_slot in slot_keys_by_pos]
+                spec_report = self.scheduler.speculative_wave(
+                    keys_by_pos, verify_s, slot_keys_by_pos=slot_keys_by_pos)
                 fetches = self._miss_fetches(idx)
                 rows = [f() for f in fetches]
             elif self._verify_ext is not None:
@@ -411,7 +533,8 @@ class Engine:
             n_keep = int(acc_active.max()) + 1
             stall = self.scheduler.charge_spec(
                 spec_report, n_keep,
-                tokens_emitted=int((acc_active + 1).sum()))
+                tokens_emitted=int((acc_active + 1).sum()),
+                n_keep_by_slot={i: int(n_acc[i]) + 1 for i in active})
             self.stats.stall_s += stall
             if self.emulate_step_s is None:
                 if stall > 0:
@@ -422,26 +545,33 @@ class Engine:
         self._step_times.append(time.perf_counter() - t0)
         self.stats.decode_steps += 1
         self.stats.spec_waves += 1
+        events = []
         for i in active:
             req = self.slots[i]
             a = int(n_acc[i])
             room = req.max_new - len(req.out)
-            emit = preds_np[i, :a + 1][:room].tolist()
-            req.out.extend(int(t) for t in emit)
+            emit = [int(t) for t in preds_np[i, :a + 1][:room]]
+            req.out.extend(emit)
             self.stats.generated_tokens += len(emit)
             self.stats.proposed_tokens += k
             self.stats.accepted_tokens += a
             self.proposer.observe(i, req.prompt + req.out)
-            self._finish_if_done(i)
+            events.append((req, emit, self._finish_if_done(i),
+                           len(req.out) - len(emit)))
+        return events
 
-    def _finish_if_done(self, slot: int) -> None:
+    def _finish_if_done(self, slot: int) -> bool:
         req = self.slots[slot]
         if req is not None and len(req.out) >= req.max_new:
             req.done_s = time.perf_counter()
+            req.status = "done"
             self.done[req.rid] = req
             self.slots[slot] = None
+            self.stats.requests_completed += 1
             if self.proposer is not None:
                 self.proposer.end(slot)
+            return True
+        return False
 
     # ------------------------------------------------------- pool emulation
 

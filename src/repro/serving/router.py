@@ -1,0 +1,160 @@
+"""Multi-replica router: N engine replicas multiplexing one Engram pool.
+
+The paper's Table 3 serves a CXL pool from several SGLang replicas (DP):
+the pool — and with it the §6 hot-row cache — is *shared* infrastructure.
+A private per-replica cache re-fetches every hot row once per replica;
+one shared cache lets replica B hit rows replica A already pulled from
+the backing tier. The router builds exactly that:
+
+  * N `Engine` replicas (shared params, private decode state/slots), each
+    wrapped in its `EngramRuntime`;
+  * one `SharedCache` (pool/cache.py) mounted as every replica's
+    `CachedStore` front-end (pool/store.py `make_store(cache=...)`), with
+    per-replica and aggregate `stats()`;
+  * pluggable dispatch: `round_robin`, `least_loaded` (fewest queued +
+    live requests), `cache_affinity` (segment-key hash of the prompt, so
+    repeat prompts land on the replica whose proposer/KV state is warm —
+    the shared cache makes *row* locality replica-agnostic either way).
+
+`submit()` routes one request; `step()` advances every busy replica one
+serving wave; `drain()` runs the fleet to idle and returns the aggregate
+`EngineStats` (counters summed, wall clock = slowest replica — replicas
+model parallel hardware, not a serial loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core.hashing import engram_indices
+from ..models.model import init_params
+from ..pool.cache import SharedCache, SharedCacheStats, TinyLFUAdmission
+from ..pool.store import make_store, segment_keys
+from .engine import Engine, EngineStats
+from .runtime import EngramRuntime, RequestHandle, TokenEvent
+
+POLICIES = ("round_robin", "least_loaded", "cache_affinity")
+
+
+@dataclasses.dataclass
+class RouterStats:
+    """Fleet view: aggregate + per-replica engine stats, shared-cache
+    accounting (None when the fleet runs private/no caches)."""
+    aggregate: EngineStats
+    per_replica: dict
+    cache: Optional[SharedCacheStats] = None
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache.hit_rate if self.cache is not None else 0.0
+
+
+class Router:
+    def __init__(self, cfg, *, replicas: int = 2, pool: Optional[str] = None,
+                 policy: str = "round_robin", shared_cache: bool = True,
+                 params=None, seed: int = 0, **engine_kwargs):
+        """``shared_cache``: mount one `SharedCache` across all replicas
+        (needs ``pool`` and ``cfg.engram.store.cache_rows > 0``); False
+        keeps the per-replica private caches `make_store` would build —
+        the baseline the shared cache is measured against."""
+        assert replicas >= 1, replicas
+        assert policy in POLICIES, (policy, POLICIES)
+        self.cfg = cfg
+        self.policy = policy
+        self.shared_cache: Optional[SharedCache] = None
+        scfg = cfg.engram.store if cfg.engram is not None else None
+        if (shared_cache and pool is not None and scfg is not None
+                and cfg.engram.enabled and scfg.cache_rows > 0):
+            adm = TinyLFUAdmission() if scfg.admission == "tinylfu" else None
+            self.shared_cache = SharedCache(scfg.cache_rows, admission=adm)
+        if params is None:
+            params = init_params(cfg, seed)
+        self.replicas: list[EngramRuntime] = []
+        for r in range(replicas):
+            name = f"replica{r}"
+            store = None
+            if self.shared_cache is not None:
+                store = make_store(cfg.engram, pool,
+                                   cache=self.shared_cache.view(name))
+            # disjoint rid ranges: fleet-wide request ids stay unique, so
+            # merged TokenEvent streams and handle lookups never collide
+            eng = Engine(cfg, params=params, pool=pool, seed=seed,
+                         store=store, name=name, rid_start=r * 1_000_000,
+                         **engine_kwargs)
+            self.replicas.append(eng.runtime())
+        self._rr = 0
+
+    # ------------------------------------------------------------- dispatch
+
+    def _load(self, rt: EngramRuntime) -> int:
+        eng = rt.engine
+        return len(eng.queue) + sum(s is not None for s in eng.slots)
+
+    def _affinity_hash(self, prompt) -> int:
+        """Stable segment-key hash of the prompt: identical (and
+        prefix-shared) prompts map to the same replica."""
+        e = self.cfg.engram
+        if e is not None and e.enabled:
+            idx = np.asarray(engram_indices(e, np.asarray([list(prompt)],
+                                                          np.int32)))
+            keys = segment_keys(e, idx).astype(np.uint64)
+            mixed = keys * np.uint64(0x9E3779B97F4A7C15)
+            return int(np.bitwise_xor.reduce(mixed) & np.uint64(0x7FFFFFFF))
+        return hash(tuple(int(t) for t in prompt)) & 0x7FFFFFFF
+
+    def select_replica(self, prompt) -> int:
+        if len(self.replicas) == 1:
+            return 0
+        if self.policy == "round_robin":
+            idx = self._rr % len(self.replicas)
+            self._rr += 1
+            return idx
+        if self.policy == "least_loaded":
+            loads = [self._load(rt) for rt in self.replicas]
+            return int(np.argmin(loads))
+        return self._affinity_hash(prompt) % len(self.replicas)
+
+    # ------------------------------------------------------------ lifecycle
+
+    def submit(self, prompt, max_new: int = 16) -> RequestHandle:
+        rt = self.replicas[self.select_replica(prompt)]
+        return rt.submit(prompt, max_new)
+
+    def step(self) -> list[TokenEvent]:
+        """One serving wave on every busy replica (lockstep DP emulation)."""
+        events: list[TokenEvent] = []
+        for rt in self.replicas:
+            if rt.busy:
+                events.extend(rt.step())
+        return events
+
+    def cancel(self, handle: RequestHandle) -> bool:
+        return handle.cancel()
+
+    def drain(self) -> EngineStats:
+        while self.busy:
+            self.step()
+        return self.stats().aggregate
+
+    @property
+    def busy(self) -> bool:
+        return any(rt.busy for rt in self.replicas)
+
+    # ----------------------------------------------------------------- stats
+
+    def stats(self) -> RouterStats:
+        agg = EngineStats()
+        per = {}
+        for rt in self.replicas:
+            agg.merge(rt.stats)
+            per[rt.engine.name] = rt.stats
+        cache = self.shared_cache.stats() if self.shared_cache is not None \
+            else None
+        return RouterStats(aggregate=agg, per_replica=per, cache=cache)
+
+    def store_stats(self) -> dict:
+        """Per-replica `StoreStats` (each replica charges its own waves)."""
+        return {rt.engine.name: rt.store.stats()
+                for rt in self.replicas if rt.store is not None}

@@ -1,0 +1,82 @@
+"""Workload spec: one way to construct serving traffic everywhere.
+
+Before this, each entry point rolled its own traffic — `launch/serve.py`
+had inline RNG prompt synthesis, `benchmarks/bench_*.py` duplicated it
+with different knobs, and `bench_speculation` hand-fed literal prompts —
+so "the same workload" across a benchmark, an example, and a test was a
+hope, not a property. A `Workload` pins it down:
+
+  * arrival process — `"batch"` (everything at t=0, the offline harness
+    shape) or `"paced"` (one request every `arrival_every` serving steps:
+    admission happens *under load*, the regime a pooled tier exists for);
+  * prompt-pool reuse — `prompt_pool=N` draws prompts from N hot prompts
+    (repeat traffic: the hot-row cache's and the n-gram proposer's
+    steady state); `prompts=(...)` pins explicit token lists;
+  * Zipf skew — `zipf_alpha` makes prompt *tokens* Zipf-distributed (the
+    paper's n-gram reuse model);
+  * per-request `max_new` — fixed, or varied per request with
+    `max_new_jitter` (staggered completions exercise slot churn).
+
+The token streams are bit-compatible with the legacy `run_once` synthesis
+(same per-request RNG seeding), so `--compare` output is preserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestSpec:
+    """One request of a built workload."""
+    prompt: tuple
+    max_new: int
+    arrival_step: int            # serving step at which the request arrives
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    requests: int = 16
+    max_new: int = 16
+    max_new_jitter: int = 0      # request r gets max_new + (r % (jitter+1))
+    prompt_pool: int = 0         # draw from N hot prompts (0 = all unique)
+    prompts: tuple = ()          # explicit prompt pool (overrides synthesis)
+    zipf_alpha: float = 0.0      # Zipf-skewed prompt tokens (0 = uniform)
+    arrival: str = "batch"       # batch | paced
+    arrival_every: int = 1       # paced: one new request every N steps
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.arrival in ("batch", "paced"), self.arrival
+        assert self.requests >= 0 and self.max_new >= 1
+
+    def build(self, vocab_size: int) -> list[RequestSpec]:
+        """Materialize the request list (deterministic in `seed`)."""
+        rng = np.random.RandomState(self.seed)
+        out = []
+        for r in range(self.requests):
+            pr = int(rng.randint(self.prompt_pool)) if self.prompt_pool else r
+            if self.prompts:
+                prompt = tuple(int(t) for t in
+                               self.prompts[pr % len(self.prompts)])
+            else:
+                plen = 4 + (pr * 7) % 20
+                if self.zipf_alpha:
+                    from ..pool.cache import zipf_keys
+                    toks = 1 + zipf_keys(plen, vocab_size - 1,
+                                         alpha=self.zipf_alpha,
+                                         seed=self.seed * 1000 + pr)
+                    prompt = tuple(int(t) for t in toks)
+                else:
+                    prng = np.random.RandomState(self.seed * 1000 + pr)
+                    prompt = tuple(int(t) for t in
+                                   prng.randint(1, vocab_size, size=plen))
+            max_new = self.max_new
+            if self.max_new_jitter:
+                max_new += r % (self.max_new_jitter + 1)
+            arrival = 0 if self.arrival == "batch" \
+                else r * max(1, self.arrival_every)
+            out.append(RequestSpec(prompt=prompt, max_new=max_new,
+                                   arrival_step=arrival))
+        return out
