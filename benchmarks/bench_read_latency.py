@@ -54,7 +54,7 @@ def measured_miss_gather_us(ecfg: EngramConfig, n_miss: int,
     tables = jnp.asarray(
         rng.randn(small.n_tables, table_rows, small.head_dim)
         .astype(np.float32))
-    fetch = TableFetcher(small, tables)
+    fetch = TableFetcher(small, tables, impl="kernel")  # measure the kernel
     keys = rng.randint(0, small.n_tables * table_rows, size=n_miss)
     return timeit(lambda k: fetch(k), keys, warmup=2, iters=5) * 1e6
 

@@ -57,6 +57,15 @@ class SpecConfig:
     speculated token of the fused verify pass relative to a single decode
     step (decode is memory-bound, so a k-token verify costs ~one step plus
     a small compute term).
+
+    ``pipeline``: run the proposer for wave N+1 *during* wave N's verify
+    pass (host work genuinely overlaps the dispatched verify). When the
+    optimistic proposal survives verification — full acceptance and a
+    correctly guessed bonus token — the next block's prefetch was known a
+    whole verify pass before wave start and the scheduler credits its
+    window accordingly (``early_issue_s``), widening the measured
+    ``stats().spec_window_steps``. Emitted tokens are identical either
+    way; only prefetch timing/accounting moves.
     """
     enabled: bool = True
     proposer: str = "ngram"                # ngram | draft
@@ -65,6 +74,7 @@ class SpecConfig:
     draft_layers: int = 1                  # layers kept by the draft model
     draft_context: int = 16                # draft prefill context (bucketed)
     verify_overhead: float = 0.05          # emulated verify cost / extra token
+    pipeline: bool = False                 # propose wave N+1 during N's verify
 
 
 @dataclass(frozen=True)

@@ -87,6 +87,54 @@ def block_engram_indices(ecfg: EngramConfig, last_tokens: jax.Array,
     return idx[:, -block.shape[1]:, :]
 
 
+def key_dtype(ecfg: EngramConfig, n_layer_slots: int):
+    """Widest integer dtype the packed key span needs on device. Without
+    jax_enable_x64 device int64 silently truncates to int32, so packing
+    asserts the span fits rather than corrupting keys."""
+    span = n_layer_slots * ecfg.n_tables * ecfg.table_vocab
+    if span <= np.iinfo(np.int32).max:
+        return jnp.int32
+    assert jax.config.jax_enable_x64, \
+        f"packed key span {span} overflows int32; enable jax_enable_x64"
+    return jnp.int64
+
+
+def pack_segment_keys(ecfg: EngramConfig, idx: jax.Array,
+                      n_layer_slots: int) -> jax.Array:
+    """Device-side segment-key packing: ``idx (..., T)`` ->
+    ``(..., L, T)`` integer keys ``(layer_slot * T + t) * table_vocab + row``
+    for every Engram layer slot at once.
+
+    This is the jit-side twin of ``pool.store.segment_keys`` (same packing,
+    bit-identical values): computing the keys inside the index fn lets the
+    serving engine pull ONE packed tensor per wave instead of syncing the
+    raw indices and re-packing them per layer in host Python — the
+    single-sync wave hot path."""
+    T = ecfg.n_tables
+    dt = key_dtype(ecfg, n_layer_slots)
+    tid = (jnp.arange(n_layer_slots, dtype=dt)[:, None] * T
+           + jnp.arange(T, dtype=dt)[None, :])               # (L, T)
+    return idx.astype(dt)[..., None, :] + tid * ecfg.table_vocab
+
+
+def decode_engram_keys(ecfg: EngramConfig, last_tokens: jax.Array,
+                       new_token: jax.Array,
+                       n_layer_slots: int) -> jax.Array:
+    """Decode-step indices, packed: (B, 1, L, T) int64 segment keys for the
+    wave (see ``pack_segment_keys``). One fused jitted call -> one host
+    sync covers every Engram layer's key stream."""
+    idx = decode_engram_indices(ecfg, last_tokens, new_token)
+    return pack_segment_keys(ecfg, idx, n_layer_slots)
+
+
+def block_engram_keys(ecfg: EngramConfig, last_tokens: jax.Array,
+                      block: jax.Array, n_layer_slots: int) -> jax.Array:
+    """Speculated-block indices, packed: (B, m, L, T) int64 segment keys
+    covering the whole proposed window (see ``pack_segment_keys``)."""
+    idx = block_engram_indices(ecfg, last_tokens, block)
+    return pack_segment_keys(ecfg, idx, n_layer_slots)
+
+
 def update_last_tokens(last_tokens: jax.Array, new_token: jax.Array) -> jax.Array:
     """Roll the (B, max_order-1) history window."""
     if last_tokens.shape[1] == 0:

@@ -9,7 +9,8 @@ from .simulator import (cached_read_latency_s, latency_sweep,
 from .cost import CostRow, breakeven_nodes, cost_table, local_cost, pool_cost
 from .store import (CachedStore, EngramStore, LocalStore, PrefetchHandle,
                     StoreStats, STRATEGY_TIERS, TableFetcher, TierStore,
-                    make_store, segment_keys, store_for_strategy)
+                    keys_to_gid, make_store, segment_keys,
+                    store_for_strategy)
 from .cache import (FrequencySketch, LRUHotRowCache, SharedCache,
                     SharedCacheStats, TinyLFUAdmission, zipf_keys)
 from .scheduler import PrefetchScheduler, SpecWaveReport, WaveReport

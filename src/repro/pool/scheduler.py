@@ -102,6 +102,15 @@ class SpecWaveReport:
     # optional per-slot key streams: [position] -> {slot: unique keys,
     # concatenated over layers} (layer offsets keep them distinct)
     slot_keys: Optional[list[dict]] = None
+    # packed per-slot streams (the single-sync hot path): row-sorted
+    # (n_slots, m, K) keys + per-(slot, position) unique counts + the slot
+    # ids aligned to axis 0 — same accounting as ``slot_keys``, one pass
+    slot_sorted: Optional[np.ndarray] = None
+    slot_uniq: Optional[np.ndarray] = None
+    slot_ids: Optional[list] = None
+    # extra window credit: the block's fetch was issued this long before
+    # wave start (pipelined proposals issue it during the previous verify)
+    early_issue_s: float = 0.0
 
     @property
     def n_positions(self) -> int:
@@ -171,7 +180,9 @@ class PrefetchScheduler:
     # ------------------------------------------------------- speculation
 
     def speculative_wave(self, keys_by_pos, step_latency_s: float,
-                         fetch=None, slot_keys_by_pos=None) -> SpecWaveReport:
+                         fetch=None, slot_keys_by_pos=None, slot_keys=None,
+                         slot_ids=None,
+                         early_issue_s: float = 0.0) -> SpecWaveReport:
         """Issue the prefetch for a whole speculated block.
 
         ``keys_by_pos``: one ``keys_per_layer`` entry per block position
@@ -191,6 +202,18 @@ class PrefetchScheduler:
         slot instead of by the batch-max accepted prefix. Counting only —
         the fused ``keys_by_pos`` stream remains what is actually fetched
         and priced.
+
+        ``slot_keys`` + ``slot_ids`` (the packed alternative the engine's
+        single-sync path uses): one ``(n_slots, m, K)`` int64 tensor of
+        every live slot's per-position keys (all layers concatenated —
+        layer offsets keep them distinct) plus the slot ids along axis 0.
+        One vectorized sort replaces the per-(position, slot, layer)
+        ``np.unique``/dict nest; the charged aggregates are identical.
+
+        ``early_issue_s``: the block's fetches were issued this long
+        *before* wave start — pipelined proposals draft wave N+1's block
+        during wave N's verify pass, so every position gains a full verify
+        pass of extra window (``SpecConfig.pipeline``).
 
         Stats are NOT charged here — verification hasn't happened yet.
         Call ``charge_spec(report, n_keep)`` afterwards.
@@ -223,17 +246,29 @@ class PrefetchScheduler:
             for i, (k, keys) in enumerate(zip(self.layers, keys_per_layer)):
                 h = self.store.prefetch(keys, fetch=fetches[i])
                 per_layer.append(h)
-                window = self.window_s(k, step_latency_s) + j * t_tok
+                window = (self.window_s(k, step_latency_s) + j * t_tok
+                          + early_issue_s)
                 over += max(0.0, h.latency_s - window)
                 lat_max = max(lat_max, h.latency_s)
                 nseg += h.n_segments
             handles.append(per_layer)
             overshoot.append(over)
             n_segments.append(nseg)
-        slot_keys = None
-        if slot_keys_by_pos is not None:
+        slot_dicts = None
+        slot_sorted = uniq_counts = ids = None
+        if slot_keys is not None:
+            sk = np.asarray(slot_keys, np.int64)
+            assert sk.ndim == 3 and sk.shape[1] == m, (sk.shape, m)
+            assert slot_ids is not None and len(slot_ids) == sk.shape[0]
+            # one sort over the whole (slot, position) grid; unique counts
+            # fall out of the sorted-neighbour diff — no per-cell np.unique
+            slot_sorted = np.sort(sk, axis=-1)
+            uniq_counts = 1 + (slot_sorted[..., 1:]
+                               != slot_sorted[..., :-1]).sum(axis=-1)
+            ids = list(slot_ids)
+        elif slot_keys_by_pos is not None:
             assert len(slot_keys_by_pos) == m, (len(slot_keys_by_pos), m)
-            slot_keys = [
+            slot_dicts = [
                 {slot: np.unique(np.concatenate(
                     [np.asarray(k, np.int64).reshape(-1)
                      for k in per_layer]))
@@ -243,7 +278,9 @@ class PrefetchScheduler:
                               n_segments=n_segments, latency_s=lat_max,
                               step_s=step_latency_s,
                               layer_frac=min(self.layers) / self.n_layers,
-                              slot_keys=slot_keys)
+                              slot_keys=slot_dicts, slot_sorted=slot_sorted,
+                              slot_uniq=uniq_counts, slot_ids=ids,
+                              early_issue_s=early_issue_s)
 
     def charge_spec(self, report: SpecWaveReport, n_keep: int,
                     tokens_emitted: Optional[int] = None,
@@ -289,7 +326,25 @@ class PrefetchScheduler:
         n_keep = max(1, min(int(n_keep), m))
         stall = max(report.overshoot_s[:n_keep])
         per_slot = None
-        if n_keep_by_slot is not None and report.slot_keys is not None:
+        if n_keep_by_slot is not None and report.slot_sorted is not None:
+            # packed path: per-(slot, position) unique counts were computed
+            # by one vectorized sort at issue time; the dedup-true per-pos
+            # union runs over the already-sorted alive rows
+            keeps = np.asarray([max(1, min(int(n_keep_by_slot[s]), m))
+                                for s in report.slot_ids])
+            acc = np.asarray([report.slot_uniq[a, :kp].sum()
+                              for a, kp in enumerate(keeps)])
+            tot = report.slot_uniq.sum(axis=1)
+            per_slot = {s: (int(acc[a]), int(tot[a] - acc[a]))
+                        for a, s in enumerate(report.slot_ids)}
+            accepted_seg = 0
+            for j in range(m):
+                alive = keeps > j
+                if alive.any():
+                    accepted_seg += int(np.unique(
+                        report.slot_sorted[alive, j, :]).size)
+            wasted_seg = sum(report.n_segments) - accepted_seg
+        elif n_keep_by_slot is not None and report.slot_keys is not None:
             keeps = {slot: max(1, min(int(kp), m))
                      for slot, kp in n_keep_by_slot.items()}
             per_slot = {
@@ -312,9 +367,11 @@ class PrefetchScheduler:
         else:
             accepted_seg = sum(report.n_segments[:n_keep])
             wasted_seg = sum(report.n_segments[n_keep:])
-        # measured window depth, in emitted-token steps (see StoreStats)
+        # measured window depth, in emitted-token steps (see StoreStats);
+        # a pipelined block was issued a verify pass early — real lead time
         window_wall = (report.layer_frac * report.step_s
-                       + (n_keep - 1) * report.step_s / m)
+                       + (n_keep - 1) * report.step_s / m
+                       + report.early_issue_s)
         t_emit = report.step_s / n_keep
         depth_steps = window_wall / t_emit if t_emit > 0 else 0.0
         tokens = n_keep if tokens_emitted is None else int(tokens_emitted)

@@ -63,12 +63,31 @@ def segment_count(ecfg: EngramConfig, batch_tokens: int) -> int:
 
 def segment_keys(ecfg: EngramConfig, idx, layer_slot: int = 0) -> np.ndarray:
     """Pack table-row indices ``idx (..., T)`` into flat int64 segment keys
-    ``(layer_slot * T + t) * table_vocab + row`` — the cache's identity."""
+    ``(layer_slot * T + t) * table_vocab + row`` — the cache's identity.
+
+    Host-side reference packing. The serving hot path packs the same keys
+    on-device inside the jitted index fns (``core.hashing.pack_segment_keys``)
+    so one sync per wave delivers every layer's stream; this function remains
+    the ground truth the device path is tested bit-identical against."""
     a = np.asarray(idx, dtype=np.int64)
     T = ecfg.n_tables
     assert a.shape[-1] == T, (a.shape, T)
     tid = np.arange(T, dtype=np.int64) + layer_slot * T
     return (a + tid * ecfg.table_vocab).reshape(-1)
+
+
+def keys_to_gid(ecfg: EngramConfig, keys: np.ndarray,
+                table_rows: Optional[int] = None) -> np.ndarray:
+    """Packed segment keys -> flat row ids in one layer's ``(T*V_pad, hd)``
+    table space. ``table_rows`` is the table's actual (possibly padded)
+    per-table row count; when it equals ``table_vocab`` the whole
+    decomposition collapses to one modulo."""
+    keys = np.asarray(keys, np.int64)
+    V = ecfg.table_vocab if table_rows is None else int(table_rows)
+    if V == ecfg.table_vocab:
+        return keys % (ecfg.n_tables * ecfg.table_vocab)
+    tid = (keys // ecfg.table_vocab) % ecfg.n_tables
+    return tid * V + keys % ecfg.table_vocab
 
 
 # ---------------------------------------------------------------------------
@@ -321,25 +340,51 @@ class CachedStore(_StoreBase):
 
 class TableFetcher:
     """Materializes rows for flat packed segment keys from one layer's
-    Engram tables ``(T, V, hd)`` via the variable-count Pallas gather
-    (``kernels/engram_gather.gather_rows_padded``) — so a cache-miss wave
-    of *arbitrary* segment count still takes the kernel hot path."""
+    Engram tables ``(T, V, hd)``.
 
-    def __init__(self, ecfg: EngramConfig, tables):
-        from ..kernels.engram_gather.ops import pad_table_lanes
+    ``impl`` selects the gather:
+      * ``"kernel"`` — the variable-count Pallas gather
+        (``kernels/engram_gather.gather_rows_padded``): a cache-miss wave
+        of arbitrary segment count still takes the kernel hot path.
+      * ``"take"``   — a jitted ``jnp.take``: on non-TPU backends the
+        Pallas kernel runs in *interpret* mode, whose grid steps execute
+        one row at a time in Python — a correctness harness, not a data
+        path — so serving on those backends takes the XLA gather instead.
+      * ``"auto"``   — kernel on TPU, take elsewhere (the default).
+    """
+
+    def __init__(self, ecfg: EngramConfig, tables, impl: str = "auto"):
+        # hoist the kernel imports out of the per-wave call
+        from ..kernels.engram_gather.ops import (_on_tpu, gather_rows_padded,
+                                                 pad_table_lanes)
+        assert impl in ("auto", "kernel", "take"), impl
         self.ecfg = ecfg
         self.T, self.V, self.hd = tables.shape
+        self.impl = impl if impl != "auto" else \
+            ("kernel" if _on_tpu() else "take")
+        self._gather = gather_rows_padded
+        if self.impl == "take":
+            import jax
+            import jax.numpy as jnp
+            self._take = jax.jit(lambda t, g: jnp.take(t, g, axis=0))
         # pad lanes to the 128 boundary ONCE — per-call padding would copy
         # the full (T*V, hd) table on every cache-miss wave
         self.flat = pad_table_lanes(tables.reshape(self.T * self.V, self.hd))
 
-    def __call__(self, keys) -> Any:
-        from ..kernels.engram_gather.ops import gather_rows_padded
-        keys = np.asarray(keys, np.int64)
-        tid = (keys // self.ecfg.table_vocab) % self.ecfg.n_tables
-        row = keys % self.ecfg.table_vocab
-        gid = tid * self.V + row                    # flat (T*V) row space
-        return gather_rows_padded(self.flat, gid)[:, :self.hd]
+    def gid_for(self, keys) -> np.ndarray:
+        """Flat row ids in this fetcher's (padded) table space for packed
+        segment keys — compute once per wave, feed ``__call__(gid=...)``."""
+        return keys_to_gid(self.ecfg, keys, table_rows=self.V).reshape(-1)
+
+    def __call__(self, keys=None, *, gid=None) -> Any:
+        """Gather rows by packed segment ``keys`` or pre-split flat row ids
+        ``gid`` (callers on the packed-key hot path already hold the
+        in-layer row ids — passing them skips the redundant decomposition)."""
+        if gid is None:
+            gid = self.gid_for(keys)
+        if self.impl == "take":
+            return self._take(self.flat, np.asarray(gid))[:, :self.hd]
+        return self._gather(self.flat, gid)[:, :self.hd]
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,6 @@
 """Continuous-batching serving engine with Engram prefetch (mini-SGLang).
 
-The engine owns the *wave primitives* — `_admit` (prefill into free
+The engine owns the *wave primitives* — `_admit` (batched prefill into free
 slots), `_decode_wave`, `_spec_wave` — each returning per-request token
 events; the request-lifecycle surface (stepwise `step()`, streaming,
 `cancel()`, multi-replica routing) lives above them in
@@ -22,15 +22,38 @@ Maps the paper's §4.3 integration onto a self-contained JAX engine:
     prefills mid-flight (requests join/leave without draining the batch).
   * Speculation — with a ``SpecConfig`` the engine runs in ``speculate``
     mode: each wave a proposer drafts k tokens per live slot, the Engram
-    prefetch covers the *entire* speculated window (position j of the
-    block is issued j token-slots before consumption — the paper's §3.2
-    claim that speculative decoding widens the prefetch window to multiple
-    full steps, now measured instead of assumed), a batched verifier
+    prefetch covers the *entire* speculated window, a batched verifier
     scores the block in one pass, and rejected tails are rolled back per
-    slot (serving/slots.rollback_state). Stalls are charged only for the
-    positions that execute and survive; the mis-speculated tail counts as
-    wasted prefetch and its replacement rows are refetched by the next
-    wave's narrow-window position 0.
+    slot (serving/slots.rollback_state). With ``SpecConfig.pipeline`` the
+    proposer drafts wave N+1's block *during* wave N's verify (the verify
+    is dispatched asynchronously; the host proposes while it runs), so a
+    surviving prediction's prefetch is issued a full verify pass early.
+
+Single-sync wave hot path
+-------------------------
+Host orchestration used to cost more than the window it protected: the
+index block was synced to the host and packed into segment keys in Python
+twice per wave, and every emitted token was pulled with its own ``int()``.
+Now the jitted index fns pack the keys on-device
+(``core.hashing.pack_segment_keys``) and each wave materializes exactly
+ONE device->host array through ``_host()``:
+
+  * decode wave N ends with one fused pull carrying [this wave's sampled
+    tokens | wave N+1's packed (B, 1, L, T) key tensor] — wave N+1 starts
+    with its keys already on host (``_next_keys``), so its charge + miss
+    fetch need zero additional syncs;
+  * the speculative wave pulls one packed (B, m, L, T) key tensor and one
+    fused (B, m+1) verdict ([preds | n_accept]);
+  * batched admission runs ONE multi-slot prefill per prompt bucket (not
+    one batch-1 jit call per queued request) whose single pull carries
+    [first tokens | the whole group's prompt keys], and the store is
+    charged once per admission wave.
+
+``stats.d2h_pulls`` counts these syncs; ``_host`` wraps them in
+``jax.transfer_guard_device_to_host("allow")`` so callers can pin the
+whole wave under a ``"disallow"`` guard (benchmarks/bench_hotpath.py,
+tests/test_hotpath.py). On the CPU backend the guard is inert (host and
+device share memory), so the counter is the enforced budget there.
 
 Pool-tier emulation: on real hardware the Engram fetch either hides inside
 the prefetch window or stalls the step (paper §3.2). The engine delegates
@@ -60,13 +83,14 @@ import numpy as np
 
 from ..configs.base import ModelConfig, SpecConfig
 from ..core.engram import retrieve
-from ..core.hashing import (block_engram_indices, decode_engram_indices,
-                            engram_indices)
+from ..core.hashing import (block_engram_indices, block_engram_keys,
+                            decode_engram_indices, decode_engram_keys,
+                            engram_indices, pack_segment_keys)
 from ..models.model import (build_decode_step, build_prefill_step,
                             init_decode_state, init_params)
 from ..models.transformer import RunFlags
 from ..pool.scheduler import PrefetchScheduler
-from ..pool.store import TableFetcher, make_store, segment_keys
+from ..pool.store import TableFetcher, make_store
 from ..pool.tiers import TIERS
 from .slots import update_slots
 
@@ -108,6 +132,10 @@ class EngineStats:
     spec_waves: int = 0              # verify waves run
     proposed_tokens: int = 0         # drafts proposed (k per live slot-wave)
     accepted_tokens: int = 0         # drafts that survived verification
+    pipelined_hits: int = 0          # slot-waves served by a pipelined block
+    pipelined_misses: int = 0        # predictions invalidated by verification
+    # --- hot path ---------------------------------------------------------
+    d2h_pulls: int = 0               # device->host syncs through _host()
 
     @property
     def tokens_per_s(self) -> float:
@@ -121,6 +149,13 @@ class EngineStats:
     @property
     def acceptance_rate(self) -> float:
         return _rate(self.accepted_tokens, self.proposed_tokens)
+
+    @property
+    def pipeline_hit_rate(self) -> float:
+        """How often the proposer's during-verify draft for wave N+1
+        survived wave N's verification (SpecConfig.pipeline)."""
+        return _rate(self.pipelined_hits,
+                     self.pipelined_hits + self.pipelined_misses)
 
     @property
     def tokens_per_step(self) -> float:
@@ -189,6 +224,7 @@ class Engine:
         self.emulate_step_s = emulate_step_s
         self.params = params if params is not None else init_params(cfg, seed)
         self.has_engram = bool(cfg.engram_layers()) and "engram" in self.params
+        self._n_eng = len(cfg.engram_layers())
 
         spec_cfg = spec if spec is not None else cfg.spec
         self.spec = spec_cfg if (spec_cfg is not None and spec_cfg.enabled) \
@@ -213,16 +249,21 @@ class Engine:
                 self._fetchers = [
                     TableFetcher(cfg.engram,
                                  self.params["engram"]["layers"][j]["tables"])
-                    for j in range(len(cfg.engram_layers()))]
+                    for j in range(self._n_eng)]
 
-        # jitted index fn for store accounting (host-side key packing needs
-        # the values, so each charged wave pays one device sync; that cost
-        # is measurement overhead on pool runs, excluded from pool=None)
-        self._decode_idx = (jax.jit(
-            lambda last, tok: decode_engram_indices(cfg.engram, last, tok))
-            if self.has_engram else None)
-        self._prefill = jax.jit(build_prefill_step(cfg, flags,
-                                                   max_len=max_len))
+        self._pool_mode = self.pool is not None and self.has_engram
+        # jitted fused index+key fns: keys are packed on-device (one int64
+        # (B, S, L, T) tensor covers every Engram layer's stream), so each
+        # charged wave costs ONE host sync instead of sync + L Python packs
+        self._decode_keys = (jax.jit(
+            lambda last, tok: decode_engram_keys(cfg.engram, last, tok,
+                                                 self._n_eng))
+            if self._pool_mode else None)
+        self._wave_sync = (jax.jit(self._wave_sync_fn)
+                           if self._pool_mode else None)
+        self._prefill_fn = build_prefill_step(cfg, flags, max_len=max_len)
+        self._prefill = jax.jit(self._prefill_fn)
+        self._admit_wave = jax.jit(self._admit_wave_fn)
         self._decode = jax.jit(build_decode_step(cfg, flags))
         ext = build_decode_step(cfg, flags, external_rows=True) \
             if self.has_engram else None
@@ -234,20 +275,22 @@ class Engine:
         self.proposer = None
         self._verify = None
         self._verify_ext = None
-        self._block_idx = None
+        self._block_keys = None
         self._block_prefetch = None
         if self.spec is not None:
             from ..spec.proposer import make_proposer
             from ..spec.verifier import build_verifier
             self.proposer = proposer if proposer is not None \
                 else make_proposer(cfg, self.spec, flags=flags, seed=seed)
-            self._verify = jax.jit(build_verifier(cfg, flags))
+            self._verify = jax.jit(
+                self._fuse_verdict(build_verifier(cfg, flags)))
             if self.has_engram:
-                self._verify_ext = jax.jit(
-                    build_verifier(cfg, flags, external_rows=True))
-                self._block_idx = jax.jit(
-                    lambda last, block: block_engram_indices(cfg.engram,
-                                                             last, block))
+                self._verify_ext = jax.jit(self._fuse_verdict(
+                    build_verifier(cfg, flags, external_rows=True)))
+                if self._pool_mode:
+                    self._block_keys = jax.jit(
+                        lambda last, block: block_engram_keys(
+                            cfg.engram, last, block, self._n_eng))
                 self._block_prefetch = jax.jit(self._block_prefetch_fn)
 
         self.state = init_decode_state(cfg, flags, max_batch, max_len)
@@ -262,6 +305,12 @@ class Engine:
         self._step_times: list[float] = []
         if step_latency_hint_s:
             self._step_times.append(step_latency_hint_s)
+        # --- single-sync hot-path state ---------------------------------
+        self._free: deque[int] = deque(range(max_batch))   # free slot ids
+        self._tokens_host = np.zeros((max_batch,), np.int64)  # self.tokens
+        self._next_keys: Optional[np.ndarray] = None  # (B,1,L,T) prefetched
+        self._prompt_buf = np.zeros((max_batch, prompt_bucket), np.int32)
+        self._pipelined: dict[int, tuple] = {}        # slot -> prediction
 
     # ------------------------------------------------------------ public API
 
@@ -307,6 +356,8 @@ class Engine:
         for slot, req in enumerate(self.slots):
             if req is not None and req.rid == rid:
                 self.slots[slot] = None
+                self._free.append(slot)
+                self._pipelined.pop(slot, None)
                 if self.proposer is not None:
                     self.proposer.end(slot)
                 self._mark_cancelled(req)
@@ -329,47 +380,120 @@ class Engine:
     def reset_stats(self) -> None:
         self.stats = EngineStats()
 
+    # -------------------------------------------------------- host syncing
+
+    def _host(self, arr) -> np.ndarray:
+        """The wave's device->host sync point. Every host materialization
+        on the serving hot path goes through here, so (a) ``d2h_pulls``
+        counts real syncs and (b) callers can wrap a whole wave in
+        ``jax.transfer_guard_device_to_host("disallow")`` and still let
+        this one pull through — any stray sync elsewhere raises."""
+        self.stats.d2h_pulls += 1
+        with jax.transfer_guard_device_to_host("allow"):
+            return np.asarray(arr)
+
     # ---------------------------------------------------------- prefill path
 
+    def _admit_wave_fn(self, params, state, tokens, batch, slots):
+        """One fused admission group: multi-slot prefill + argmax + slot
+        scatter + (pool mode) on-device prompt-key packing. Returns the new
+        engine state plus ONE packed int64 vector [first tokens | keys] —
+        the group's single host pull."""
+        logits, pstate = self._prefill_fn(params, batch)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # (n,)
+        state = update_slots(state, pstate, slots)
+        tokens = tokens.at[slots].set(tok)
+        packed = tok
+        if self._pool_mode:
+            e = self.cfg.engram
+            idx = engram_indices(e, batch["tokens"])             # (n,S,T)
+            pk = pack_segment_keys(e, idx, self._n_eng)          # (n,S,L,T)
+            packed = jnp.concatenate([tok.astype(pk.dtype), pk.reshape(-1)])
+        return state, tokens, packed
+
+    def _prompt_view(self, n: int, S: int) -> np.ndarray:
+        """Zeroed (n, S) view of the preallocated prompt buffer (grown as
+        needed) — admission re-fills one buffer instead of allocating a
+        fresh numpy array per request."""
+        if self._prompt_buf.shape[1] < S or self._prompt_buf.shape[0] < n:
+            self._prompt_buf = np.zeros(
+                (max(n, self._prompt_buf.shape[0]),
+                 max(S, self._prompt_buf.shape[1])), np.int32)
+        view = self._prompt_buf[:n, :S]
+        view[:] = 0
+        return view
+
     def _admit(self) -> list:
-        """Admit queued requests into free slots (one prefill each).
+        """Admit queued requests into free slots — batched: one multi-slot
+        prefill per prompt bucket plus ONE fused store charge for the whole
+        admission wave (the old path ran a batch-1 jit call and a separate
+        charge per request).
 
         Wave primitive: returns ``(request, emitted_tokens, finished)``
         tuples — the runtime turns them into ``TokenEvent`` streams."""
         events = []
-        free = [i for i, s in enumerate(self.slots) if s is None]
-        while free and self.queue:
-            slot = free.pop(0)
-            req = self.queue.popleft()
+        if not (self._free and self.queue):
+            return events
+        fills = []
+        while self._free and self.queue:
+            fills.append((self._free.popleft(), self.queue.popleft()))
+        groups: dict[int, list] = {}
+        for slot, req in fills:
             S = _bucket(len(req.prompt), self.prompt_bucket)
-            toks = np.zeros((1, S), np.int32)
-            toks[0, :len(req.prompt)] = req.prompt
-            batch = {"tokens": jnp.asarray(toks),
-                     "lengths": jnp.asarray([len(req.prompt)], np.int32)}
+            groups.setdefault(S, []).append((slot, req))
+        charge = [[] for _ in range(self._n_eng)] if self._pool_mode else None
+        for S, group in sorted(groups.items()):
+            n = len(group)
+            # pad the group batch to a power of two: admission traces stay
+            # O(log max_batch) shapes per prompt bucket instead of one per
+            # group size (a churny serve loop would recompile every wave).
+            # Pad rows scatter to slot ``max_batch`` — out of bounds, so
+            # the state write is dropped — and their keys/tokens are
+            # sliced off on the host.
+            n_pad = 1 << (n - 1).bit_length()
+            buf = self._prompt_view(n_pad, S)
+            lens = np.ones((n_pad,), np.int32)
+            for r, (_, req) in enumerate(group):
+                buf[r, :len(req.prompt)] = req.prompt
+                lens[r] = len(req.prompt)
             if self.emulate_step_s is not None:
+                # one bucketed multi-slot prefill ~ one batched step
                 self.stats.emu_time_s += self.emulate_step_s
-            if self.pool is not None and self.has_engram:
-                # prompt-wide retrieval wave through the store: real keys,
-                # so a configured hot-row cache warms on prefill traffic
-                toks_np = np.asarray([req.prompt], np.int32)
-                idx = np.asarray(engram_indices(self.cfg.engram, toks_np))
-                self._charge_wave(idx)
-            logits, new_state = self._prefill(self.params, batch)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (1,)
-            self.state = self._insert(self.state, new_state,
-                                      jnp.asarray([slot], jnp.int32))
-            self.tokens = self.tokens.at[slot].set(tok[0])
-            req.out.append(int(tok[0]))
-            req.first_token_s = time.perf_counter()
-            req.status = "running"
-            self.slots[slot] = req
-            self.stats.prefills += 1
-            self.stats.generated_tokens += 1
-            self.stats.ttft_s_sum += req.first_token_s - req.submitted_s
-            if self.proposer is not None:
-                self.proposer.begin(slot, req.prompt + req.out)
-            events.append((req, [int(tok[0])], self._finish_if_done(slot),
-                           len(req.out) - 1))
+            slots_j = jnp.asarray([s for s, _ in group]
+                                  + [self.max_batch] * (n_pad - n),
+                                  jnp.int32)
+            batch = {"tokens": jnp.asarray(buf),
+                     "lengths": jnp.asarray(lens)}
+            self.state, self.tokens, packed = self._admit_wave(
+                self.params, self.state, self.tokens, batch, slots_j)
+            packed = self._host(packed)          # ONE pull per group
+            toks = packed[:n]
+            if self._pool_mode:
+                pk = packed[n_pad:].reshape(n_pad, S, self._n_eng, -1)[:n]
+                for r, (_, req) in enumerate(group):
+                    live = pk[r, :lens[r]]       # drop right-pad positions
+                    for j in range(self._n_eng):
+                        charge[j].append(live[:, j, :].reshape(-1))
+            t_now = time.perf_counter()
+            for r, (slot, req) in enumerate(group):
+                tok = int(toks[r])
+                req.out.append(tok)
+                req.first_token_s = t_now
+                req.status = "running"
+                self.slots[slot] = req
+                self._tokens_host[slot] = tok
+                self.stats.prefills += 1
+                self.stats.generated_tokens += 1
+                self.stats.ttft_s_sum += t_now - req.submitted_s
+                if self.proposer is not None:
+                    self.proposer.begin(slot, req.prompt + req.out)
+                events.append((req, [tok], self._finish_if_done(slot),
+                               len(req.out) - 1))
+        if self._pool_mode:
+            # one fused charge: the admission wave's full prompt-key
+            # stream per layer (a configured hot-row cache warms on it)
+            self._charge_wave([np.concatenate(c) for c in charge])
+        self._next_keys = None      # decode keys were computed pre-admit
         return events
 
     # ----------------------------------------------------------- decode path
@@ -383,22 +507,33 @@ class Engine:
             rows.append(retrieve(e, tab, idx, self.flags.engram_strategy))
         return rows
 
-    def _miss_fetches(self, idx: np.ndarray):
+    def _wave_sync_fn(self, last_tokens, new_tok):
+        """End-of-wave fused sync: [this wave's sampled tokens | next
+        wave's packed (B·1·L·T) decode keys] in ONE integer vector — the
+        decode wave's single device->host transfer."""
+        keys = decode_engram_keys(self.cfg.engram, last_tokens, new_tok,
+                                  self._n_eng)
+        return jnp.concatenate([new_tok.astype(keys.dtype), keys.reshape(-1)])
+
+    def _miss_fetches(self, keys: np.ndarray):
         """Per-layer fetch closures materializing a wave's rows through
-        the padded Pallas miss-path gather (``TableFetcher``). ``idx``
-        is the FULL batch's (B, S, T) index block — decode consumes rows
-        for every slot, while the store is charged with live keys only."""
-        e = self.cfg.engram
-        B, S = idx.shape[:2]
+        the padded Pallas miss-path gather (``TableFetcher``). ``keys``
+        is the FULL batch's (B, S, L, T) packed-key block — decode consumes
+        rows for every slot, while the store is charged with live keys
+        only. Row ids are derived from the packed keys exactly once per
+        wave (``TableFetcher.gid_for``) instead of the old pack-here /
+        unpack-there round trip."""
+        B, S = keys.shape[:2]
 
         def layer_fetch(j):
-            keys = segment_keys(e, idx, layer_slot=j)
-            return lambda: self._fetchers[j](keys).reshape(B, S, -1)
+            gid = self._fetchers[j].gid_for(keys[:, :, j, :])
+            return lambda: self._fetchers[j](gid=gid).reshape(B, S, -1)
 
         return [layer_fetch(j) for j in range(len(self._fetchers))]
 
     def _decode_wave(self) -> list:
-        """One batched greedy-decode wave over the live slots.
+        """One batched greedy-decode wave over the live slots — exactly one
+        device->host sync in steady state (see module docstring).
 
         Wave primitive: returns ``(request, emitted_tokens, finished)``
         tuples (see ``_admit``)."""
@@ -406,17 +541,26 @@ class Engine:
         if not active:
             return []
         t0 = time.perf_counter()
+        B = self.max_batch
         if self.emulate_step_s is not None:
             self.stats.emu_time_s += self.emulate_step_s
         rows = None
-        if self.pool is not None and self.has_engram:
+        if self._pool_mode:
             # the active slots' real segment-key stream: the store's cache
-            # measures hit rates on it, the scheduler charges the overshoot
-            idx = np.asarray(self._decode_idx(self.state["last_tokens"],
-                                              self.tokens))
-            fetch = self._miss_fetches(idx) \
+            # measures hit rates on it, the scheduler charges the overshoot.
+            # Steady state reuses the keys prefetched by the previous
+            # wave's fused sync; only post-admission waves recompute.
+            keys = self._next_keys
+            if keys is None:
+                keys = self._host(self._decode_keys(
+                    self.state["last_tokens"], self.tokens))
+            self._next_keys = None
+            act = keys[np.asarray(active)]               # (A, 1, L, T)
+            per_layer = [act[:, :, j, :].reshape(-1)
+                         for j in range(self._n_eng)]
+            fetch = self._miss_fetches(keys) \
                 if self._decode_ext is not None else None
-            rows = self._charge_wave(idx[np.asarray(active)], fetch=fetch)
+            rows = self._charge_wave(per_layer, fetch=fetch)
         elif self._decode_ext is not None:
             # the paper's prefetch: retrieval dispatched as its own call,
             # materialized through the store (prefetch -> gather)
@@ -433,14 +577,23 @@ class Engine:
                                               self.tokens)
         new_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.tokens = new_tok
+        if self._pool_mode:
+            # the wave's ONE sync: sampled tokens + next wave's keys fused
+            sync = self._host(self._wave_sync(self.state["last_tokens"],
+                                              new_tok))
+            toks = sync[:B]
+            self._next_keys = sync[B:].reshape(B, 1, self._n_eng, -1)
+        else:
+            toks = self._host(new_tok)
+        self._tokens_host[:] = toks
         self._step_times.append(time.perf_counter() - t0)
         self.stats.decode_steps += 1
         events = []
         for i in active:
             req = self.slots[i]
-            req.out.append(int(new_tok[i]))
+            req.out.append(int(toks[i]))
             self.stats.generated_tokens += 1
-            events.append((req, [int(new_tok[i])], self._finish_if_done(i),
+            events.append((req, [int(toks[i])], self._finish_if_done(i),
                            len(req.out) - 1))
         return events
 
@@ -456,10 +609,67 @@ class Engine:
             rows.append(retrieve(e, tab, idx, self.flags.engram_strategy))
         return rows
 
+    @staticmethod
+    def _fuse_verdict(verify):
+        """Wrap a verifier so its host-bound outputs — preds (B, m) and
+        n_accept (B,) — come back as ONE (B, m+1) int32 verdict tensor:
+        the speculative wave's single post-verify pull."""
+        def fused(params, state, block, rows=None):
+            preds, n_accept, next_tok, new_state = (
+                verify(params, state, block, rows) if rows is not None
+                else verify(params, state, block))
+            verdict = jnp.concatenate([preds, n_accept[:, None]], axis=1)
+            return verdict, next_tok, new_state
+        return fused
+
+    def _propose_block(self, active, k: int) -> tuple:
+        """Build the wave's (B, m) block on the host: pending tokens from
+        the host mirror (no device pull), drafts from surviving pipelined
+        predictions where available, else fresh proposals."""
+        B = self.max_batch
+        block = np.zeros((B, k + 1), np.int32)
+        block[:, 0] = self._tokens_host
+        hits = set()
+        for i in active:
+            req = self.slots[i]
+            stream = req.prompt + req.out
+            drafts = None
+            pipe = self._pipelined.pop(i, None)
+            if pipe is not None:
+                base_len, expected_tail, next_drafts = pipe
+                if (len(stream) == base_len + len(expected_tail)
+                        and stream[base_len:] == expected_tail):
+                    drafts = next_drafts
+                    hits.add(i)
+                    self.stats.pipelined_hits += 1
+                else:
+                    self.stats.pipelined_misses += 1
+            if drafts is None:
+                drafts = self.proposer.propose(i, stream, k)
+            block[i, 1:] = drafts
+        return block, hits
+
+    def _pipeline_proposals(self, active, block: np.ndarray, k: int) -> None:
+        """Draft wave N+1's blocks while wave N's verify is in flight (the
+        verify was dispatched asynchronously; this host work overlaps it).
+        The optimistic context assumes full acceptance; the prediction is
+        used next wave only if the emitted tail — accepted drafts plus the
+        bonus token — matches it exactly."""
+        for i in active:
+            req = self.slots[i]
+            stream = req.prompt + req.out
+            drafts = [int(t) for t in block[i, 1:]]
+            ahead = self.proposer.propose(i, stream + drafts, k + 1)
+            # surviving tail = this wave's drafts + the predicted bonus
+            self._pipelined[i] = (len(stream), drafts + [int(ahead[0])],
+                                  [int(t) for t in ahead[1:]])
+
     def _spec_wave(self) -> list:
         """One speculative wave: propose k drafts per live slot, prefetch
         the whole block's Engram window, verify in one batched pass, roll
         back rejected tails, charge stalls for surviving positions only.
+        Two host syncs total: the packed (B, m, L, T) key tensor and the
+        fused (B, m+1) verdict.
 
         Wave primitive: returns ``(request, emitted_tokens, finished)``
         tuples (see ``_admit``)."""
@@ -471,11 +681,7 @@ class Engine:
         m = k + 1
         B = self.max_batch
 
-        block = np.zeros((B, m), np.int32)
-        block[:, 0] = np.asarray(self.tokens)
-        for i in active:
-            req = self.slots[i]
-            block[i, 1:] = self.proposer.propose(i, req.prompt + req.out, k)
+        block, pipe_hits = self._propose_block(active, k)
         block_j = jnp.asarray(block)
 
         # the verify pass costs ~one decode step (memory-bound) plus a
@@ -488,28 +694,28 @@ class Engine:
         spec_report = None
         rows = None
         if self.has_engram:
-            if self.pool is not None:
-                e = self.cfg.engram
-                nl = len(self.cfg.engram_layers())
-                idx = np.asarray(self._block_idx(self.state["last_tokens"],
-                                                 block_j))       # (B, m, T)
-                # per-slot key streams, packed once; the fused per-layer
-                # stream the store prices is their concatenation (same
-                # order as segment_keys over idx[act]), and charge_spec
-                # uses the per-slot split to attribute accepted vs wasted
-                # prefetch to each slot's own accepted prefix
-                slot_keys_by_pos = [
-                    {i: [segment_keys(e, idx[i:i + 1, s:s + 1], layer_slot=j)
-                         for j in range(nl)]
-                     for i in active}
-                    for s in range(m)]
+            if self._pool_mode:
+                # ONE packed pull covers every (position, slot, layer)
+                # stream; numpy views replace the old per-cell Python
+                # packing nest, and the scheduler dedups with one sort
+                keys = self._host(self._block_keys(
+                    self.state["last_tokens"], block_j))     # (B,m,L,T)
+                act = np.asarray(active)
+                ka = keys[act]                               # (A,m,L,T)
                 keys_by_pos = [
-                    [np.concatenate([by_slot[i][j] for i in active])
-                     for j in range(nl)]
-                    for by_slot in slot_keys_by_pos]
+                    [ka[:, s, j, :].reshape(-1) for j in range(self._n_eng)]
+                    for s in range(m)]
+                # a fully pipelined block was issued a verify pass early;
+                # one straggler slot drags the fused fetch back to wave
+                # start, so the credit needs every live slot to have hit
+                early = verify_s if (active and
+                                     all(i in pipe_hits for i in active)) \
+                    else 0.0
                 spec_report = self.scheduler.speculative_wave(
-                    keys_by_pos, verify_s, slot_keys_by_pos=slot_keys_by_pos)
-                fetches = self._miss_fetches(idx)
+                    keys_by_pos, verify_s,
+                    slot_keys=ka.reshape(len(active), m, -1),
+                    slot_ids=active, early_issue_s=early)
+                fetches = self._miss_fetches(keys)
                 rows = [f() for f in fetches]
             elif self._verify_ext is not None:
                 fetch = lambda: self._block_prefetch(
@@ -518,16 +724,23 @@ class Engine:
                     self.store.prefetch(len(active) * m, fetch=fetch))
 
         if rows is not None:
-            preds, n_accept, next_tok, new_state = self._verify_ext(
+            verdict, next_tok, new_state = self._verify_ext(
                 self.params, self.state, block_j, rows)
         else:
-            preds, n_accept, next_tok, new_state = self._verify(
+            verdict, next_tok, new_state = self._verify(
                 self.params, self.state, block_j)
         self.state = new_state
         self.tokens = next_tok
 
-        n_acc = np.asarray(n_accept)
-        preds_np = np.asarray(preds)
+        if self.spec.pipeline:
+            # wave N+1's proposals, drafted while the verify is in flight
+            self._pipeline_proposals(active, block, k)
+
+        verdict = self._host(verdict)                  # (B, m+1)
+        preds_np = verdict[:, :m]
+        n_acc = verdict[:, m]
+        # host mirror of next_tok: preds[b, n_accept[b]] by construction
+        self._tokens_host[:] = preds_np[np.arange(B), n_acc]
         if spec_report is not None:
             acc_active = n_acc[np.asarray(active)]
             n_keep = int(acc_active.max()) + 1
@@ -567,6 +780,8 @@ class Engine:
             req.status = "done"
             self.done[req.rid] = req
             self.slots[slot] = None
+            self._free.append(slot)
+            self._pipelined.pop(slot, None)
             self.stats.requests_completed += 1
             if self.proposer is not None:
                 self.proposer.end(slot)
@@ -582,20 +797,17 @@ class Engine:
             return 1e-3
         return float(np.median(self._step_times[-32:]))
 
-    def _charge_wave(self, idx: np.ndarray, fetch=None):
+    def _charge_wave(self, keys_per_layer: list, fetch=None):
         """Issue one retrieval wave through the store and charge its stall.
 
-        ``idx (B, S, T)`` are the wave's table-row indices; they become one
-        packed segment-key stream per Engram layer (each layer owns its
-        tables), so a configured hot-row cache measures real reuse. The
-        scheduler computes the per-layer window overshoot, which is slept
-        (real point) or accounted (emulated point). Returns the per-layer
-        gathered rows when ``fetch`` is given (a per-layer fetch list or a
-        fused callable)."""
-        e = self.cfg.engram
-        keys = [segment_keys(e, idx, layer_slot=j)
-                for j in range(len(self.cfg.engram_layers()))]
-        report = self.scheduler.step(keys, self._step_estimate_s(),
+        ``keys_per_layer``: one flat packed segment-key array per Engram
+        layer (packed on-device by the jitted index fns — the host only
+        slices views), so a configured hot-row cache measures real reuse.
+        The scheduler computes the per-layer window overshoot, which is
+        slept (real point) or accounted (emulated point). Returns the
+        per-layer gathered rows when ``fetch`` is given (a per-layer fetch
+        list or a fused callable)."""
+        report = self.scheduler.step(keys_per_layer, self._step_estimate_s(),
                                      fetch=fetch)
         self.stats.stall_s += report.stall_s
         if self.emulate_step_s is None:

@@ -50,6 +50,29 @@ class RouterStats:
     def cache_hit_rate(self) -> float:
         return self.cache.hit_rate if self.cache is not None else 0.0
 
+    @property
+    def acceptance_rate(self) -> float:
+        """Fleet speculation acceptance: per-replica ``proposed_tokens`` /
+        ``accepted_tokens`` are merged into the aggregate, so this is the
+        traffic-weighted fleet rate (not a mean of per-replica rates)."""
+        return self.aggregate.acceptance_rate
+
+    @property
+    def speculation(self) -> dict:
+        """Fleet + per-replica speculation metrics in one dict — the
+        router-level counterpart of ``EngineStats``' spec counters."""
+        return {
+            "proposed_tokens": self.aggregate.proposed_tokens,
+            "accepted_tokens": self.aggregate.accepted_tokens,
+            "acceptance_rate": self.aggregate.acceptance_rate,
+            "pipeline_hit_rate": self.aggregate.pipeline_hit_rate,
+            "per_replica": {
+                name: {"proposed_tokens": s.proposed_tokens,
+                       "accepted_tokens": s.accepted_tokens,
+                       "acceptance_rate": s.acceptance_rate}
+                for name, s in self.per_replica.items()},
+        }
+
 
 class Router:
     def __init__(self, cfg, *, replicas: int = 2, pool: Optional[str] = None,

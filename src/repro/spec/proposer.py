@@ -16,6 +16,14 @@ acceptance rate (deeper realized prefetch windows) against proposal cost:
                           needs no draft-side rollback surgery.
   * ``ScriptedProposer`` / ``ConstantProposer`` — test/bench harness
                           proposers pinning acceptance to 100% / ~0%.
+
+Pipelining contract (``SpecConfig.pipeline``): the engine also calls
+``propose`` with *optimistic* contexts — the current stream extended by
+not-yet-verified drafts — while the verify pass is in flight, to draft
+wave N+1's block a full verify pass early. ``propose`` must therefore be
+read-only (no learning from its own input): ingestion happens only through
+``begin``/``observe``, which the engine feeds verified streams. Every
+proposer here satisfies that.
 """
 from __future__ import annotations
 
@@ -41,7 +49,9 @@ class Proposer(Protocol):
     def propose(self, slot: int, context: Sequence[int],
                 k: int) -> list[int]:
         """Draft the next ``k`` tokens after ``context`` (always length k —
-        pad with a guess; bad guesses are rejected, not wrong)."""
+        pad with a guess; bad guesses are rejected, not wrong). Must be
+        read-only: pipelined mode passes speculative contexts that may
+        never materialize (see module docstring)."""
         ...
 
     def end(self, slot: int) -> None:

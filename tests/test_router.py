@@ -125,6 +125,34 @@ def test_aggregate_stats_sum_replicas(cfg, params):
     assert len({h.rid for h in handles}) == len(handles)
 
 
+def test_fleet_speculation_metrics(cfg, params):
+    """Fleet-wide speculation: per-replica proposed/accepted counters
+    merge into the aggregate and RouterStats exposes the traffic-weighted
+    fleet acceptance_rate (ROADMAP PR 3 follow-up)."""
+    from repro.configs.base import SpecConfig
+    router = _router(cfg, params, spec=SpecConfig(max_draft=2))
+    # repeated prompts: the per-replica n-gram proposers learn the greedy
+    # continuations, so replays verify at high acceptance
+    _drive(router, cfg, Workload(requests=12, max_new=6, prompt_pool=2))
+    rs = router.stats()
+    per = rs.per_replica
+    proposed = sum(st.proposed_tokens for st in per.values())
+    accepted = sum(st.accepted_tokens for st in per.values())
+    assert proposed > 0
+    assert rs.aggregate.proposed_tokens == proposed
+    assert rs.aggregate.accepted_tokens == accepted
+    assert rs.acceptance_rate == pytest.approx(accepted / proposed)
+    # every busy replica ran speculative waves and is itemized
+    spec = rs.speculation
+    assert spec["proposed_tokens"] == proposed
+    assert set(spec["per_replica"]) == set(per)
+    for name, st in per.items():
+        assert spec["per_replica"][name]["acceptance_rate"] == \
+            pytest.approx(st.acceptance_rate)
+    # the replay traffic must actually produce accepted drafts fleet-wide
+    assert rs.acceptance_rate > 0.0
+
+
 def test_serve_api_builds_router(cfg, params):
     res = serve(cfg, SHARED_WL, pool="RDMA", replicas=2, params=params,
                 max_batch=2, max_len=64, prompt_bucket=8)
