@@ -1,0 +1,227 @@
+"""Offered-load serving benchmark: TTFT/latency percentiles vs QPS x tier.
+
+The paper's headline claim is *near-DRAM end-to-end performance under real
+serving load*. This bench reproduces it as a measured curve on the virtual
+clock (serving/clock.py): a Poisson arrival process at an offered QPS is
+served from each pool tier at the emulated production operating point, and
+per-request TTFT / end-to-end latency percentiles are computed from the
+virtual timestamps — fully deterministic (no host-timing noise).
+
+Outputs
+-------
+  * ``load_curves.csv`` + stdout rows — one row per (tier, qps):
+    p50/p95/p99 virtual TTFT and latency, virtual token throughput,
+    stall and link-wait totals.
+  * ``BENCH_load.json`` — the full sweep plus the shared-cache split
+    experiment and the pass/fail checks (the CI ``load-smoke`` job
+    uploads this artifact and fails on a violated check):
+      - ``cxl_tracks_dram``: at the lowest offered load, CXL p50 TTFT is
+        within ``TOL_CXL`` of DRAM-only (the paper's Table 2/3 story);
+      - ``rdma_diverges``: RDMA's absolute p50 TTFT gap over DRAM grows
+        with offered load (queueing compounds the per-wave stall) and its
+        ratio exceeds CXL's at the highest point;
+      - ``shared_cache_split``: at the switch-saturation operating point
+        two replicas on ONE pre-warmed shared hot-row cache are strictly
+        slower than two pre-warmed private caches (bandwidth-split
+        contention) — identical traffic, 100% hit rates in both configs,
+        the only difference is the clock link the hits queue on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+
+import numpy as np
+
+from repro.configs.base import StoreConfig
+from repro.launch.train import reduced_config
+from repro.serving import Router, Workload, serve
+
+from .common import OUT_DIR, emit, write_csv
+
+EMULATED_STEP_S = 2e-4       # production decode cadence (Table 2/3 point)
+SATURATION_STEP_S = 2e-6     # switch-saturation point: windows ~ tier lat
+TOL_CXL = 1.25               # CXL p50 TTFT within 25% of DRAM at low load
+
+
+def _tiny_cfg(cache_rows: int = 0):
+    cfg = reduced_config("deepseek-7b")
+    e = dataclasses.replace(cfg.engram, layers=(1,),
+                            store=StoreConfig(cache_rows=cache_rows))
+    return dataclasses.replace(cfg, n_layers=3, layer_types=("attn",) * 3,
+                               attn_kinds=("global",) * 3,
+                               ffn_types=("dense",) * 3, engram=e)
+
+
+def _pct(xs, q) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def _drive(cfg, *, pool, qps, requests, max_new, replicas=1,
+           shared_cache=True, step_s=EMULATED_STEP_S, seed=0):
+    w = Workload(requests=requests, max_new=max_new, arrival="poisson",
+                 qps=qps, zipf_alpha=1.4, prompt_pool=max(2, requests // 4),
+                 seed=seed)
+    res = serve(cfg, w, pool=pool, replicas=replicas,
+                policy="least_loaded" if replicas > 1 else "round_robin",
+                shared_cache=shared_cache, max_batch=4, max_len=64,
+                prompt_bucket=8, emulate_step_s=step_s)
+    ttft = res.ttft_v()
+    lat = res.latency_v()
+    st = res.stats
+    wait_s = 0.0
+    ss = res.store_stats()
+    if isinstance(ss, dict):
+        wait_s = sum(s.wait_s for s in ss.values())
+    elif ss is not None:
+        wait_s = ss.wait_s
+    return {
+        "pool": pool or "DRAM-local", "qps": qps, "replicas": replicas,
+        "shared_cache": bool(shared_cache and replicas > 1),
+        "requests": len(ttft),
+        "ttft_p50_us": _pct(ttft, 50) * 1e6,
+        "ttft_p95_us": _pct(ttft, 95) * 1e6,
+        "ttft_p99_us": _pct(ttft, 99) * 1e6,
+        "lat_p50_us": _pct(lat, 50) * 1e6,
+        "lat_p99_us": _pct(lat, 99) * 1e6,
+        "v_time_s": st.v_time_s,
+        "tokens_per_vs": st.generated_tokens / max(st.v_time_s, 1e-12),
+        "stall_ms": st.stall_s * 1e3,
+        "link_wait_us": wait_s * 1e6,
+    }
+
+
+def _split_drive(cfg, *, shared: bool, requests: int, max_new: int) -> dict:
+    """Shared-vs-private cache split at the saturation point: warm a
+    2-replica fleet on a fixed request set, then re-serve the identical
+    set and measure the warm pass alone (100% hit rate either way)."""
+    router = Router(cfg, replicas=2, pool="DRAM", policy="round_robin",
+                    shared_cache=shared, max_batch=4, max_len=64,
+                    prompt_bucket=8, emulate_step_s=SATURATION_STEP_S)
+    prompts = [[3 + r % 5, 17, 42 + r % 7, 9] for r in range(requests)]
+    for p in prompts:                       # warm pass: identical traffic
+        router.submit(list(p), max_new)
+    router.drain()
+    for rt in router.replicas:
+        rt.engine.reset_stats()
+        if rt.engine.store is not None:
+            rt.engine.store.reset_stats()
+    t0 = router.clock.now_s
+    handles = [router.submit(list(p), max_new) for p in prompts]
+    router.drain()
+    ttft = [h.request.first_token_v - h.request.submitted_v
+            for h in handles]
+    ss = router.store_stats()
+    hits = sum(s.hits for s in ss.values())
+    misses = sum(s.misses for s in ss.values())
+    return {
+        "shared": shared,
+        "ttft_p50_us": _pct(ttft, 50) * 1e6,
+        "ttft_p99_us": _pct(ttft, 99) * 1e6,
+        "drain_vs": router.clock.now_s - t0,
+        "hit_rate": hits / max(hits + misses, 1),
+        "link_wait_us": sum(s.wait_s for s in ss.values()) * 1e6,
+        "stall_us": sum(s.stall_s for s in ss.values()) * 1e6,
+    }
+
+
+def run(fast: bool = False) -> dict:
+    cfg = _tiny_cfg()
+    requests = 10 if fast else 32
+    max_new = 5 if fast else 10
+    qps_grid = (500.0, 4000.0, 16000.0) if fast \
+        else (250.0, 1000.0, 4000.0, 16000.0)
+
+    rows = []
+    by = {}
+    for pool in ("DRAM", "CXL", "RDMA"):
+        for qps in qps_grid:
+            r = _drive(cfg, pool=pool, qps=qps, requests=requests,
+                       max_new=max_new)
+            rows.append(r)
+            by[(pool, qps)] = r
+            emit(f"load/{pool}/qps{int(qps)}", r["ttft_p50_us"],
+                 f"ttft_p99={r['ttft_p99_us']:.1f}us "
+                 f"lat_p50={r['lat_p50_us']:.1f}us "
+                 f"tok/vs={r['tokens_per_vs']:.0f} "
+                 f"stall={r['stall_ms']:.3f}ms")
+    write_csv("load_curves",
+              list(rows[0].keys()), [list(r.values()) for r in rows])
+
+    lo, hi = qps_grid[0], qps_grid[-1]
+    cxl_ratio_lo = by[("CXL", lo)]["ttft_p50_us"] \
+        / max(by[("DRAM", lo)]["ttft_p50_us"], 1e-9)
+    rdma_ratio_lo = by[("RDMA", lo)]["ttft_p50_us"] \
+        / max(by[("DRAM", lo)]["ttft_p50_us"], 1e-9)
+    cxl_ratio_hi = by[("CXL", hi)]["ttft_p50_us"] \
+        / max(by[("DRAM", hi)]["ttft_p50_us"], 1e-9)
+    rdma_ratio_hi = by[("RDMA", hi)]["ttft_p50_us"] \
+        / max(by[("DRAM", hi)]["ttft_p50_us"], 1e-9)
+
+    # shared-cache bandwidth split: two replicas, one hot-row cache vs two
+    # private ones, at the switch-saturation operating point where the
+    # prefetch window is comparable to the cache-hit latency. Both fleets
+    # are pre-warmed on the identical request set, so the measured pass
+    # runs at 100% hit rate in BOTH configs — cold-miss asymmetry (the
+    # shared cache warms once, private ones twice: the PR 3 result) is
+    # excluded, and the only delta is the link the hits queue on.
+    cache_cfg = _tiny_cfg(cache_rows=200_000)
+    shared = _split_drive(cache_cfg, shared=True, requests=requests,
+                          max_new=max_new)
+    private = _split_drive(cache_cfg, shared=False, requests=requests,
+                           max_new=max_new)
+    emit("load/shared_cache_split",
+         shared["ttft_p99_us"] - private["ttft_p99_us"],
+         f"shared_p99={shared['ttft_p99_us']:.2f}us "
+         f"private_p99={private['ttft_p99_us']:.2f}us "
+         f"shared_drain={shared['drain_vs']*1e6:.1f}us "
+         f"private_drain={private['drain_vs']*1e6:.1f}us "
+         f"shared_wait={shared['link_wait_us']:.3f}us "
+         f"hit_rates={shared['hit_rate']:.3f}/{private['hit_rate']:.3f}")
+
+    rdma_gap_lo = by[("RDMA", lo)]["ttft_p50_us"] \
+        - by[("DRAM", lo)]["ttft_p50_us"]
+    rdma_gap_hi = by[("RDMA", hi)]["ttft_p50_us"] \
+        - by[("DRAM", hi)]["ttft_p50_us"]
+    checks = {
+        # paper claim: CXL tracks DRAM at low utilization
+        "cxl_tracks_dram": bool(cxl_ratio_lo <= TOL_CXL),
+        # RDMA's absolute TTFT penalty must compound with offered load
+        # (queueing amplifies the per-wave stall) and beat CXL's ratio
+        "rdma_diverges": bool(rdma_gap_hi > rdma_gap_lo
+                              and rdma_ratio_hi > cxl_ratio_hi),
+        # bandwidth split: one cache serving two replicas is strictly
+        # slower than two private caches under saturation, at equal
+        # (unit) hit rates — visible in the TTFT tail (the first wave is
+        # contention-free by construction, so p50 cannot move), the fleet
+        # drain time, and the measured link queueing
+        "shared_cache_split": bool(
+            shared["ttft_p99_us"] > private["ttft_p99_us"]
+            and shared["drain_vs"] > private["drain_vs"]
+            and shared["link_wait_us"] > private["link_wait_us"]),
+    }
+    out = {
+        "emulate_step_s": EMULATED_STEP_S,
+        "saturation_step_s": SATURATION_STEP_S,
+        "qps_grid": list(qps_grid),
+        "rows": rows,
+        "ratios": {"cxl_lo": cxl_ratio_lo, "cxl_hi": cxl_ratio_hi,
+                   "rdma_lo": rdma_ratio_lo, "rdma_hi": rdma_ratio_hi},
+        "shared_cache_split": {"shared": shared, "private": private},
+        "checks": checks,
+    }
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    with open(OUT_DIR / "BENCH_load.json", "w") as f:
+        json.dump(out, f, indent=2)
+    for name, ok in checks.items():
+        emit(f"load/check/{name}", 0.0 if ok else 1.0,
+             "PASS" if ok else "FAIL")
+    if not all(checks.values()):
+        raise SystemExit(f"bench_load checks failed: "
+                         f"{[k for k, v in checks.items() if not v]}")
+    return out
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

@@ -18,6 +18,7 @@ BENCHES = [
     ("throughput", "Table 2: E2E serving throughput by pool tier"),
     ("scalability", "Table 3: DP x nnode scaling"),
     ("speculation", "§3.2 deep lookahead: acceptance x tier speculation"),
+    ("load", "Offered-load TTFT/latency percentiles vs QPS x tier"),
     ("hotpath", "Single-sync wave hot path: waves/s + d->h transfer budget"),
     ("cost", "Tables 4/5: capex comparison"),
     ("kernels", "Kernel microbenches (gather / gated fuse)"),

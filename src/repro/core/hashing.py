@@ -135,6 +135,83 @@ def block_engram_keys(ecfg: EngramConfig, last_tokens: jax.Array,
     return pack_segment_keys(ecfg, idx, n_layer_slots)
 
 
+# ---------------------------------------------------------------------------
+# host (numpy) twin — bit-identical to the jitted path
+# ---------------------------------------------------------------------------
+#
+# The pipelined speculative wave predicts wave N+1's block on the host
+# during wave N's verify. When every live slot's prediction survives, the
+# engine can skip wave N+1's device key pull entirely *iff* it can pack
+# the block's segment keys host-side from token IDs alone. These numpy
+# mirrors reproduce the jitted hash/pack math exactly (uint32 wraparound
+# semantics are identical on CPU); tests assert bitwise equality.
+
+# head_constants derives a fixed (n_tables, max_order) table from the
+# config seed; the host path runs once per live slot per speculative wave,
+# so re-deriving it there (fresh RandomState each call) would put constant
+# work back on the orchestration budget the single-sync path protects
+_HOST_CONSTS: dict = {}
+
+
+def _host_head_constants(ecfg: EngramConfig) -> np.ndarray:
+    key = (ecfg.seed, ecfg.n_tables, tuple(ecfg.orders))
+    c = _HOST_CONSTS.get(key)
+    if c is None:
+        c = _HOST_CONSTS[key] = head_constants(ecfg)
+    return c
+
+
+def host_engram_indices(ecfg: EngramConfig, tokens: np.ndarray) -> np.ndarray:
+    """Numpy mirror of ``engram_indices``: tokens (B,S) -> (B,S,T) int32."""
+    tokens = np.asarray(tokens)
+    consts = _host_head_constants(ecfg)                    # (T, max_order) u32
+    def mix(x):
+        x = x ^ (x >> np.uint32(16))
+        x = x * _M1
+        x = x ^ (x >> np.uint32(15))
+        x = x * _M2
+        return x ^ (x >> np.uint32(16))
+    outs = []
+    for oi, order in enumerate(ecfg.orders):
+        cols = []
+        for j in range(order - 1, -1, -1):                 # oldest ... newest
+            if j == 0:
+                cols.append(tokens)
+            else:
+                cols.append(np.pad(tokens[:, :-j], ((0, 0), (j, 0)),
+                                   constant_values=ecfg.pad_token))
+        win = np.stack(cols, axis=-1).astype(np.uint32)
+        for h in range(ecfg.n_heads):
+            t = oi * ecfg.n_heads + h
+            seed_t = np.uint32((0x9E3779B9 * (t + 1)) & 0xFFFFFFFF)
+            acc = np.full(win.shape[:-1], seed_t, np.uint32)
+            for j in range(order):
+                acc = mix(acc ^ (win[..., j] * consts[t, j]))
+            outs.append(acc % np.uint32(ecfg.table_vocab))
+    return np.stack(outs, axis=-1).astype(np.int32)
+
+
+def host_block_keys(ecfg: EngramConfig, stream, block,
+                    n_layer_slots: int) -> np.ndarray:
+    """Numpy mirror of ``block_engram_keys`` for ONE slot: ``stream`` is
+    the slot's emitted token history *excluding* the block, ``block`` the
+    m = [pending, drafts...] window. Returns packed (m, L, T) int64 keys
+    bit-identical to the device path (which sees the same trailing
+    ``max_order - 1`` context via the rolled ``last_tokens`` window)."""
+    o = max(ecfg.orders)
+    ctx = [int(t) for t in stream][-(o - 1):] if o > 1 else []
+    if len(ctx) < o - 1:                      # early stream: pad like state
+        ctx = [ecfg.pad_token] * (o - 1 - len(ctx)) + ctx
+    block = [int(t) for t in block]
+    toks = np.asarray([ctx + block], np.int32)            # (1, o-1+m)
+    idx = host_engram_indices(ecfg, toks)[0, -len(block):, :]   # (m, T)
+    T = ecfg.n_tables
+    tid = (np.arange(n_layer_slots, dtype=np.int64)[:, None] * T
+           + np.arange(T, dtype=np.int64)[None, :])             # (L, T)
+    return (idx.astype(np.int64)[:, None, :]
+            + tid[None, :, :] * ecfg.table_vocab)               # (m, L, T)
+
+
 def update_last_tokens(last_tokens: jax.Array, new_token: jax.Array) -> jax.Array:
     """Roll the (B, max_order-1) history window."""
     if last_tokens.shape[1] == 0:

@@ -36,7 +36,7 @@ def run_once(cfg, *, requests: int, max_new: int, pool, params=None,
              zipf_alpha: float = 0.0, admission: str = "lru",
              spec: SpecConfig = None, prompt_pool: int = 0,
              replicas: int = 1, policy: str = "round_robin",
-             shared_cache: bool = True):
+             shared_cache: bool = True, qps: float = 0.0):
     """One workload drive through `serving.serve` (kept as the stable
     knob-level entry the benchmarks call). Returns (frontend, stats):
     the frontend is an `EngramRuntime` (or a `Router` for replicas>1)."""
@@ -48,7 +48,8 @@ def run_once(cfg, *, requests: int, max_new: int, pool, params=None,
         cfg = with_store(cfg, cache_rows=cache_rows, admission=admission)
     workload = Workload(requests=requests, max_new=max_new,
                         prompt_pool=prompt_pool, zipf_alpha=zipf_alpha,
-                        seed=seed)
+                        arrival="poisson" if qps > 0 else "batch",
+                        qps=qps, seed=seed)
     res = serve(cfg, workload, pool=pool, replicas=replicas, policy=policy,
                 shared_cache=shared_cache, warmup=warmup, params=params,
                 flags=flags, max_batch=max_batch, max_len=max_len, seed=seed,
@@ -107,6 +108,10 @@ def main(argv=None) -> int:
                     help="draw prompts from a pool of N distinct prompts "
                          "(repeat traffic: the n-gram proposer's and the "
                          "hot-row cache's steady state); 0 = all unique")
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="Poisson offered-load arrivals at this rate on "
+                         "the fleet's virtual clock (0 = batch arrivals); "
+                         "prints virtual TTFT percentiles")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas behind a Router (DP serving; "
                          ">1 shares one hot-row cache across the fleet)")
@@ -144,13 +149,18 @@ def main(argv=None) -> int:
                               zipf_alpha=args.zipf_alpha,
                               prompt_pool=args.prompt_pool,
                               replicas=args.replicas, policy=args.policy,
-                              shared_cache=not args.private_cache)
+                              shared_cache=not args.private_cache,
+                              qps=args.qps)
         label = f"pool={args.pool or 'local'}"
         if args.replicas > 1:
             label += f" x{args.replicas} replicas ({args.policy})"
         print(f"{label}: {stats.generated_tokens} tokens "
               f"in {stats.wall_s:.2f}s = {stats.tokens_per_s:.1f} tok/s "
               f"(stall {stats.stall_s * 1e3:.1f} ms)")
+        if args.qps > 0:
+            print(f"offered load {args.qps:.0f} qps: "
+                  f"virtual time {stats.v_time_s * 1e3:.2f} ms, "
+                  f"mean TTFT {stats.mean_ttft_v * 1e6:.1f} us (virtual)")
         if args.speculate:
             print(f"speculate: acceptance={stats.acceptance_rate:.3f} "
                   f"({stats.accepted_tokens}/{stats.proposed_tokens} drafts, "

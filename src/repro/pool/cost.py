@@ -1,11 +1,43 @@
-"""§5.4 capital-expenditure model (Tables 4/5).
+"""§5.4 capital-expenditure model (Tables 4/5) + fleet bandwidth budgets.
 
 Local-DRAM provisioning: every node holds the full Engram table.
 CXL pool: one shared copy + switch + per-node adapters + controllers.
+
+This module also owns the *provisioned-bandwidth* side of the contention
+model (serving/clock.py charges time against it): a pooled fleet reads
+through per-node adapters into one shared switch, so the effective
+bandwidth a replica sees is the budget split — the same arithmetic Table 3
+measures and ``pool/simulator.scalability_table`` evaluates analytically.
 """
 from __future__ import annotations
 
 import dataclasses
+
+# XConn XC50256-class switch: the pool-side aggregate budget every DP
+# replica's reads ultimately share (paper §2.2 / Table 3 setup).
+CXL_SWITCH_BW_Bps = 512e9
+
+
+def contended_bandwidth_Bps(adapter_Bps: float, readers: int,
+                            nnodes: int = 1,
+                            switch_Bps: float = CXL_SWITCH_BW_Bps) -> float:
+    """Effective per-reader bandwidth for ``readers`` replicas spread over
+    ``nnodes`` hosts: replicas on one host split that host's adapter, and
+    every replica splits the shared switch. The min of the two budgets is
+    what a reader's wire time is priced against."""
+    readers = max(1, int(readers))
+    per_node = max(1, -(-readers // max(1, int(nnodes))))
+    return min(adapter_Bps / per_node, switch_Bps / readers)
+
+
+def contended_tier(tier, readers: int, nnodes: int = 1,
+                   switch_Bps: float = CXL_SWITCH_BW_Bps):
+    """``TierSpec`` with its bandwidth replaced by the contended budget —
+    the analytic twin of the clock's measured link queueing."""
+    return dataclasses.replace(
+        tier, bandwidth_Bps=contended_bandwidth_Bps(
+            tier.bandwidth_Bps, readers, nnodes, switch_Bps))
+
 
 DEFAULT_PRICES = {
     "dram_per_gb": 15.00,

@@ -34,6 +34,7 @@ is distinct and the cache tracks them separately).
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
@@ -73,6 +74,17 @@ def _per_layer_fetches(fetch, n_layers: int):
     return [shared.layer(i) for i in range(n_layers)]
 
 
+@dataclasses.dataclass(frozen=True)
+class TraceWave:
+    """One charged wave on the virtual timeline — enough to *replay* the
+    charge through a fresh store/scheduler/clock and land on bit-identical
+    stalls (``simulator.replay_stall_s``): the wave's virtual issue time,
+    its step latency, and the measured per-layer (hits, misses) split."""
+    issued_at_s: float
+    step_s: float
+    split: tuple                       # ((hits, misses), ...) per layer
+
+
 @dataclasses.dataclass
 class WaveReport:
     """Outcome of scheduling one retrieval wave."""
@@ -80,6 +92,7 @@ class WaveReport:
     latency_s: float                   # slowest per-layer fetch this wave
     hidden: bool                       # every fetch fit its window
     handles: list[PrefetchHandle]
+    issued_at_s: float = 0.0           # virtual issue time (clock-bound)
 
     def gather(self, store: EngramStore) -> list:
         """Materialize the wave's rows through the store — one gather per
@@ -141,6 +154,12 @@ class PrefetchScheduler:
             "one step come from real speculation (speculative_wave), not " \
             "a config knob"
         self.depth = depth
+        # every charged step() wave, replayable through the same code path
+        # (simulator.replay_stall_s — the one-clock regression contract).
+        # Bounded: a long-lived serving process keeps the most recent
+        # window (a truncated trace replays the tail, which is what a
+        # drift investigation wants; nobody replays million-wave runs)
+        self.trace: "deque[TraceWave]" = deque(maxlen=65536)
 
     def window_s(self, layer_k: int, step_latency_s: float) -> float:
         """Prefetch window for Engram layer ``layer_k`` at the given step
@@ -174,8 +193,12 @@ class PrefetchScheduler:
             lat_max = max(lat_max, h.latency_s)
         hidden = stall == 0.0
         self.store.note_wave(stall, hidden)
+        issued = handles[0].issued_at_s if handles else 0.0
+        self.trace.append(TraceWave(
+            issued_at_s=issued, step_s=step_latency_s,
+            split=tuple((h.hits, h.misses) for h in handles)))
         return WaveReport(stall_s=stall, latency_s=lat_max, hidden=hidden,
-                          handles=handles)
+                          handles=handles, issued_at_s=issued)
 
     # ------------------------------------------------------- speculation
 

@@ -95,15 +95,50 @@ def engram_step_overhead_s(ecfg: EngramConfig, point: ServingPoint,
     any retrieval overshoot beyond each layer's prefetch window.
 
     Charged by the same ``PrefetchScheduler`` the serving engine runs —
-    the analytic tables and the engine share one stall formula. The
-    paper's 1-indexed convention (layer k gets k-1 layers of window) maps
-    to the scheduler's 0-indexed windows via ``k - 1``."""
+    the analytic tables and the engine share one stall formula, evaluated
+    on one (fresh, uncontended) ``VirtualClock`` timeline. The paper's
+    1-indexed convention (layer k gets k-1 layers of window) maps to the
+    scheduler's 0-indexed windows via ``k - 1``."""
+    from ..serving.clock import VirtualClock
     from .scheduler import PrefetchScheduler
-    sched = PrefetchScheduler(TierStore(ecfg, tier), ecfg,
+    clock = VirtualClock()
+    store = TierStore(ecfg, tier, clock=clock)
+    store.bind_cursor(clock.cursor("sim"))
+    sched = PrefetchScheduler(store, ecfg,
                               layers=[max(k - 1, 0) for k in ecfg.layers],
                               n_layers=point.n_layers)
     report = sched.step(point.batch_tokens, point.step_latency_s)
     return compute_overhead_s + report.stall_s, report.hidden
+
+
+def replay_stall_s(ecfg: EngramConfig, tier, trace, *, layers, n_layers,
+                   store_cfg=None, clock=None) -> float:
+    """Replay an engine-recorded wave trace (``PrefetchScheduler.trace``)
+    through a *fresh* clock-bound store + scheduler — the simulator's
+    prediction of the stall time the engine measured.
+
+    Because engine and simulator share one code path (store latency model,
+    scheduler windows, clock link queueing), the prediction must agree
+    bit-for-bit with the engine's ``stall_s`` on the same trace — the
+    regression contract tests/test_clock.py pins down. ``trace`` entries
+    carry the virtual issue time, step latency, and per-layer
+    (hits, misses) split of each charged wave."""
+    from ..serving.clock import VirtualClock
+    from .scheduler import PrefetchScheduler
+    from .store import Segments, make_store
+    clock = clock if clock is not None else VirtualClock()
+    cursor = clock.cursor("replay")
+    store = make_store(ecfg, tier, store_cfg=store_cfg, clock=clock)
+    store.bind_cursor(cursor)
+    sched = PrefetchScheduler(store, ecfg, layers=layers, n_layers=n_layers)
+    total = 0.0
+    for wave in trace:
+        cursor.advance_to(wave.issued_at_s)
+        cursor.next_wave()
+        report = sched.step([Segments(h, m) for h, m in wave.split],
+                            wave.step_s)
+        total += report.stall_s
+    return total
 
 
 def throughput_table(ecfg: EngramConfig, point: ServingPoint,
@@ -161,15 +196,13 @@ def scalability_table(ecfg: EngramConfig, point: ServingPoint,
     host (CPU/PCIe) — the paper's DP=2 yields 1.46x, captured by
     ``dp_efficiency`` (calibrated to Table 3). The pool side contends on
     the shared switch (512 GB/s) and per-node adapters (56 GB/s)."""
+    from .cost import contended_tier
     out = []
-    adapter_bw = TIERS["CXL"].bandwidth_Bps
-    switch_bw = 512e9
     for dp in dps:
         for nn in nnodes:
-            per_node = max(1, -(-dp // nn))          # replicas per adapter
-            tier = dataclasses.replace(
-                TIERS["CXL"],
-                bandwidth_Bps=min(adapter_bw / per_node, switch_bw / dp))
+            # replicas split their host adapter and the shared switch —
+            # the provisioned-bandwidth budget pool/cost.py owns
+            tier = contended_tier(TIERS["CXL"], dp, nnodes=nn)
             comp = engram_compute_frac * point.step_latency_s
             ovh, hidden = engram_step_overhead_s(ecfg, point, tier, comp)
             step = point.step_latency_s + ovh

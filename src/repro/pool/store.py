@@ -94,6 +94,21 @@ def keys_to_gid(ecfg: EngramConfig, keys: np.ndarray,
 # handles + stats
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class Segments:
+    """Analytic charge unit: an explicit (hits, misses) split, bypassing
+    both token->segment expansion and the cache. The simulator's trace
+    replay (``simulator.replay_stall_s``) feeds the engine's *recorded*
+    per-wave splits back through the same store code path — the one-clock
+    regression contract."""
+    hits: int
+    misses: int
+
+    @property
+    def n(self) -> int:
+        return self.hits + self.misses
+
+
 @dataclasses.dataclass
 class PrefetchHandle:
     """An issued (in-flight) retrieval wave."""
@@ -104,6 +119,9 @@ class PrefetchHandle:
     fetch: Optional[Callable[[], Any]] = None    # materializes the rows
     rows: Any = None
     gathered: bool = False
+    wait_s: float = 0.0                # queueing delay on shared links
+    issued_at_s: float = 0.0           # virtual issue time (clock-bound)
+    reservations: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -121,6 +139,7 @@ class StoreStats:
     hidden_waves: int = 0              # waves fully inside the window
     stall_s: float = 0.0               # accumulated overshoot
     retrieval_s: float = 0.0           # accumulated modelled latency
+    wait_s: float = 0.0                # queue delay on shared clock links
     # ---- speculative prefetch accounting (spec/ + scheduler) ------------
     spec_waves: int = 0                # speculative (multi-token) waves
     spec_tokens: int = 0               # tokens emitted by speculative waves
@@ -175,15 +194,33 @@ class EngramStore(Protocol):
 # ---------------------------------------------------------------------------
 
 class _StoreBase:
-    """Shared prefetch/gather bookkeeping; subclasses define the latency."""
+    """Shared prefetch/gather bookkeeping; subclasses define the latency.
+
+    A store may be *clock-bound*: ``bind_cursor`` attaches the owning
+    replica's ``serving/clock.py`` cursor, and the subclass registers the
+    shared ``Link``(s) its transfers occupy. A charged wave then adds the
+    link's queueing delay (another replica's transfer still in flight) to
+    its modelled latency — the bandwidth-split contention the paper's
+    Table 3 measures. Unbound stores (``clock=None``) behave exactly as
+    before: pure tier model, zero wait."""
 
     def __init__(self, ecfg: EngramConfig, tier_name: str):
         self.ecfg = ecfg
         self._stats = StoreStats(tier=tier_name)
+        self.cursor = None
+
+    def bind_cursor(self, cursor) -> None:
+        """Attach the owning replica's timeline cursor (serving/clock.py)."""
+        self.cursor = cursor
 
     # latency model -----------------------------------------------------
     def latency_for_segments(self, n_segments: int) -> float:
         raise NotImplementedError
+
+    def occupancy_s(self, n_segments: int) -> float:
+        """Shared-medium occupancy of a wave (what a clock link books);
+        0 for stores with no shared resource."""
+        return 0.0
 
     def read_latency_s(self, batch_tokens: int) -> float:
         """Analytic read latency for a full (uncached) token batch."""
@@ -198,7 +235,10 @@ class _StoreBase:
         identically), not of the cache — pricing duplicates here would
         misattribute dedup savings to the LRU when cached and uncached
         runs are compared. Analytic mode (int token count) keeps the
-        paper's raw B-discrete-reads convention."""
+        paper's raw B-discrete-reads convention; ``Segments`` pins an
+        explicit split (trace replay)."""
+        if isinstance(tokens, Segments):
+            return tokens.n, tokens.hits, tokens.misses
         if np.isscalar(tokens) or isinstance(tokens, int):
             n = segment_count(self.ecfg, int(tokens))
         else:
@@ -208,19 +248,55 @@ class _StoreBase:
     def prefetch(self, tokens, fetch: Optional[Callable[[], Any]] = None
                  ) -> PrefetchHandle:
         n, hits, misses = self._classify(tokens)
-        lat = self._split_latency(hits, misses)
+        lat, wait, resv = self._charged_latency(hits, misses)
         h = PrefetchHandle(n_segments=n, latency_s=lat, hits=hits,
-                           misses=misses, fetch=fetch)
+                           misses=misses, fetch=fetch, wait_s=wait,
+                           issued_at_s=self.cursor.now_s if self.cursor
+                           is not None else 0.0,
+                           reservations=resv)
         s = self._stats
         s.prefetches += 1
         s.segments += n
         s.hits += hits
         s.misses += misses
         s.retrieval_s += lat
+        s.wait_s += wait
         return h
 
     def _split_latency(self, hits: int, misses: int) -> float:
         return self.latency_for_segments(hits + misses)
+
+    def _charged_latency(self, hits: int, misses: int
+                         ) -> tuple[float, float, list]:
+        """Modelled latency + shared-link queue wait for one wave ->
+        (latency incl. wait, wait alone, link reservations)."""
+        lat = self._split_latency(hits, misses)
+        wait, resv = self._reserve(hits + misses)
+        return lat + wait, wait, resv
+
+    def _reserve(self, n_segments: int) -> tuple[float, list]:
+        link = getattr(self, "_link", None)
+        if link is None or self.cursor is None or n_segments <= 0:
+            return 0.0, []
+        wait, tr = link.reserve(self.cursor.now_s,
+                                self.occupancy_s(n_segments),
+                                nbytes=n_segments * segment_bytes(self.ecfg),
+                                wave=self.cursor.wave_tag())
+        return wait, [tr]
+
+    def reserve_prefetch(self, n_segments: int):
+        """Book a *future* wave's occupancy on the shared medium now (the
+        engine's pipelined speculative prefetch issues wave N+1's transfer
+        during wave N). Returns the ``Transfer`` (or None when unbound);
+        the engine refunds it at the next wave — where the normal charge
+        path re-prices the real keys — or on mid-flight ``cancel()``."""
+        link = getattr(self, "_link", None)
+        if link is None or self.cursor is None or n_segments <= 0:
+            return None
+        _, tr = link.reserve(self.cursor.now_s,
+                             self.occupancy_s(n_segments),
+                             nbytes=n_segments * segment_bytes(self.ecfg))
+        return tr
 
     def gather(self, handle: PrefetchHandle) -> Any:
         if not handle.gathered:
@@ -267,17 +343,26 @@ class _StoreBase:
 
 
 class TierStore(_StoreBase):
-    """Engram rows resident in one memory tier of the paper's fabric."""
+    """Engram rows resident in one memory tier of the paper's fabric.
 
-    def __init__(self, ecfg: EngramConfig, tier: TierSpec | str):
+    ``clock``: bind the tier's shared medium as a fleet-wide ``Link``
+    (keyed by tier name, so every replica's TierStore on the same clock
+    contends on one budget — the pool is shared infrastructure)."""
+
+    def __init__(self, ecfg: EngramConfig, tier: TierSpec | str, clock=None):
         tier = TIERS[tier] if isinstance(tier, str) else tier
         super().__init__(ecfg, tier.name)
         self.tier = tier
+        self._link = clock.link(f"tier:{tier.name}", tier.bandwidth_Bps) \
+            if clock is not None else None
 
     def latency_for_segments(self, n_segments: int) -> float:
         if n_segments <= 0:
             return 0.0
         return self.tier.read_latency_s(n_segments, segment_bytes(self.ecfg))
+
+    def occupancy_s(self, n_segments: int) -> float:
+        return self.tier.service_s(n_segments, segment_bytes(self.ecfg))
 
 
 class LocalStore(_StoreBase):
@@ -298,27 +383,76 @@ class CachedStore(_StoreBase):
     wave completes at ``max(hit path, miss path)`` — the same formula
     ``simulator.cached_read_latency_s`` uses, evaluated here with the
     *measured* per-wave split instead of an assumed Zipf hit rate.
+
+    Clock-bound, the two paths occupy two distinct links: misses the
+    backing tier's fleet-wide link, hits the cache's own DRAM channel
+    (``cache_link``). A *shared* hot-row cache hands every replica the
+    same link — N replicas hitting one DRAM cache split its bandwidth —
+    while private caches each own theirs (free parallelism, the baseline).
     """
 
     def __init__(self, backing: TierStore, cache_tier: TierSpec | str = "DRAM",
-                 cache: Optional[LRUHotRowCache] = None):
+                 cache: Optional[LRUHotRowCache] = None, clock=None,
+                 cache_link=None):
         super().__init__(backing.ecfg, backing.tier.name)
         self.backing = backing
         self.cache_tier = TIERS[cache_tier] if isinstance(cache_tier, str) \
             else cache_tier
         self.cache = cache
+        if cache_link is not None:
+            self._cache_link = cache_link
+        elif clock is not None:
+            self._cache_link = clock.link(f"cache:{id(self):x}",
+                                          self.cache_tier.bandwidth_Bps)
+        else:
+            self._cache_link = None
         self._stats.cache_tier = self.cache_tier.name
         # NB: the cache defines __len__, so test identity, not truthiness
         self._stats.cache_rows = 0 if cache is None else cache.capacity_rows
 
+    def bind_cursor(self, cursor) -> None:
+        super().bind_cursor(cursor)
+        self.backing.bind_cursor(cursor)
+
     def latency_for_segments(self, n_segments: int) -> float:
         return self.backing.latency_for_segments(n_segments)
+
+    def occupancy_s(self, n_segments: int) -> float:
+        # pre-reservations assume the miss path (the backing medium)
+        return self.backing.occupancy_s(n_segments)
+
+    def reserve_prefetch(self, n_segments: int):
+        return self.backing.reserve_prefetch(n_segments)
 
     def _split_latency(self, hits: int, misses: int) -> float:
         seg = segment_bytes(self.ecfg)
         t_hit = self.cache_tier.read_latency_s(hits, seg) if hits else 0.0
         t_miss = self.backing.latency_for_segments(misses)
         return max(t_hit, t_miss)
+
+    def _charged_latency(self, hits: int, misses: int
+                         ) -> tuple[float, float, list]:
+        seg = segment_bytes(self.ecfg)
+        resv = []
+        t_hit = self.cache_tier.read_latency_s(hits, seg) if hits else 0.0
+        t_miss = self.backing.latency_for_segments(misses)
+        w_hit = w_miss = 0.0
+        if self.cursor is not None:
+            wave = self.cursor.wave_tag()
+            now = self.cursor.now_s
+            if hits and self._cache_link is not None:
+                w_hit, tr = self._cache_link.reserve(
+                    now, self.cache_tier.service_s(hits, seg),
+                    nbytes=hits * seg, wave=wave)
+                resv.append(tr)
+            blink = getattr(self.backing, "_link", None)
+            if misses and blink is not None:
+                w_miss, tr = blink.reserve(
+                    now, self.backing.occupancy_s(misses),
+                    nbytes=misses * seg, wave=wave)
+                resv.append(tr)
+        lat = max(t_hit + w_hit, t_miss + w_miss)
+        return lat, max(w_hit, w_miss), resv
 
     def ideal_latency_s(self, batch_tokens: int, hit_rate: float) -> float:
         """Analytic mode (the §6 formula): assume ``hit_rate`` instead of
@@ -328,7 +462,8 @@ class CachedStore(_StoreBase):
         return self._split_latency(hits, n - hits)
 
     def _classify(self, tokens) -> tuple[int, int, int]:
-        if np.isscalar(tokens) or isinstance(tokens, int) or self.cache is None:
+        if (isinstance(tokens, Segments) or np.isscalar(tokens)
+                or isinstance(tokens, int) or self.cache is None):
             return super()._classify(tokens)
         wave: WaveAccess = self.cache.access_wave(tokens)
         return wave.n_segments, wave.hits, wave.misses
@@ -403,27 +538,35 @@ STRATEGY_TIERS: dict[str, Optional[str]] = {
 
 
 def make_store(ecfg: EngramConfig, tier: TierSpec | str | None,
-               store_cfg=None, cache=None) -> EngramStore:
+               store_cfg=None, cache=None, clock=None,
+               cache_link=None) -> EngramStore:
     """Build the store for a backing tier, honouring ``ecfg.store`` knobs
     (cache capacity / tier / admission). ``tier=None`` -> LocalStore.
 
     ``cache``: mount an externally-owned hot-row cache (e.g. a
     ``SharedCache.view()`` shared across engine replicas) instead of a
-    private LRU — the DP front-end the router builds."""
+    private LRU — the DP front-end the router builds.
+
+    ``clock``: bind the store to a fleet ``VirtualClock`` — the backing
+    tier contends on one fleet-wide link, and the hot-row cache on
+    ``cache_link`` when given (the router passes one link for a shared
+    cache) or a private per-store link otherwise."""
     scfg = store_cfg if store_cfg is not None else ecfg.store
     if tier is None:
         return LocalStore(ecfg)
-    base = TierStore(ecfg, tier)
+    base = TierStore(ecfg, tier, clock=clock)
     if cache is not None:
         tier_name = scfg.cache_tier if scfg is not None else "DRAM"
-        return CachedStore(base, cache_tier=tier_name, cache=cache)
+        return CachedStore(base, cache_tier=tier_name, cache=cache,
+                           clock=clock, cache_link=cache_link)
     if scfg is not None and scfg.cache_rows > 0:
         admission = getattr(scfg, "admission", "lru")
         assert admission in ("lru", "tinylfu"), admission
         adm = TinyLFUAdmission() if admission == "tinylfu" else None
         return CachedStore(base, cache_tier=scfg.cache_tier,
                            cache=LRUHotRowCache(scfg.cache_rows,
-                                                admission=adm))
+                                                admission=adm),
+                           clock=clock, cache_link=cache_link)
     return base
 
 

@@ -28,16 +28,40 @@ class TierSpec:
     bandwidth_Bps: float           # sustained transfer bandwidth
     concurrency: int               # segments in flight (pipelining factor)
     per_message_s: float = 0.0     # per-segment software/NIC cost (RDMA)
+    aggregate: bool = False        # one scatter-gather payload per wave
 
-    def read_latency_s(self, n_segments: int, segment_bytes: int) -> float:
-        """Latency to fetch n_segments discrete segments."""
-        bytes_total = n_segments * segment_bytes
-        # pipelined device latency: first-access + streaming of the rest
+    def software_s(self, n_segments: int) -> float:
+        """Host/NIC software cost: runs on the *requesting* node, so it
+        never serializes on the shared link. An aggregating tier sends ONE
+        scatter-gather message per wave regardless of segment count."""
+        if self.aggregate:
+            return self.base_latency_s + self.per_message_s
+        return self.base_latency_s + self.per_message_s * n_segments
+
+    def service_s(self, n_segments: int, segment_bytes: int) -> float:
+        """Occupancy of the tier's shared medium for one wave — the part a
+        ``serving/clock.py`` ``Link`` serializes across concurrent
+        readers (the bandwidth-split contention model).
+
+        Non-aggregating tiers pipeline discrete segments: first-access
+        latency + streamed remainder, floored by the wire time. An
+        aggregating tier (``RDMA-agg``) moves the whole wave as one
+        batched payload: a single first-access, then pure wire — the
+        per-row markup the analytic model used to charge is gone."""
+        if n_segments <= 0:
+            return 0.0
+        wire = n_segments * segment_bytes / self.bandwidth_Bps
+        if self.aggregate:
+            return max(self.segment_latency_s, wire)
         device = self.segment_latency_s * (
             1.0 + (n_segments - 1) / max(self.concurrency, 1))
-        wire = bytes_total / self.bandwidth_Bps
-        software = self.base_latency_s + self.per_message_s * n_segments
-        return software + max(device, wire)
+        return max(device, wire)
+
+    def read_latency_s(self, n_segments: int, segment_bytes: int) -> float:
+        """Uncontended latency to fetch n_segments discrete segments:
+        software setup + medium occupancy (``service_s``)."""
+        return self.software_s(n_segments) + self.service_s(n_segments,
+                                                            segment_bytes)
 
     def read_bandwidth_Bps(self, n_segments: int, segment_bytes: int) -> float:
         t = self.read_latency_s(n_segments, segment_bytes)
@@ -65,8 +89,10 @@ HBM = TierSpec("HBM", base_latency_s=0.5e-6, segment_latency_s=40e-9,
 # Paper §6: "aggregate small data payloads prior to RDMA transmission" —
 # one scatter-gather message for the whole batch kills the per-message
 # software cost; the price is an indexing round-trip in the base latency.
+# ``aggregate=True``: the wave is charged as ONE batched payload through
+# ``TierStore`` (single first-access + wire), not a per-row markup.
 RDMA_AGG = TierSpec("RDMA-agg", base_latency_s=18e-6,
                     segment_latency_s=2.2e-6, bandwidth_Bps=12.5e9,
-                    concurrency=4096, per_message_s=0.0)
+                    concurrency=4096, per_message_s=0.0, aggregate=True)
 
 TIERS = {t.name: t for t in (DRAM, CXL, RDMA, HBM, RDMA_AGG)}

@@ -1,3 +1,4 @@
+from .clock import Cursor, Link, Transfer, VirtualClock
 from .engine import Engine, EngineStats, Request
 from .slots import select_slots, update_slots
 from .runtime import EngramRuntime, RequestHandle, TokenEvent

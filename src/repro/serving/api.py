@@ -44,6 +44,18 @@ class ServeResult:
         store = self.frontend.store
         return store.stats() if store is not None else None
 
+    def ttft_v(self) -> list:
+        """Per-request virtual TTFT (offered-load arrival -> first token
+        on the fleet clock), submission order, admitted requests only."""
+        return [h.request.first_token_v - h.request.submitted_v
+                for h in self.handles if h.request.first_token_v > 0.0]
+
+    def latency_v(self) -> list:
+        """Per-request virtual end-to-end latency (arrival -> last
+        token), completed requests only."""
+        return [h.request.done_v - h.request.submitted_v
+                for h in self.handles if h.finished]
+
 
 def _engines(frontend) -> list:
     if isinstance(frontend, Router):
@@ -59,8 +71,11 @@ def serve(cfg, workload: Workload, *, pool=None, replicas: int = 1,
     ``replicas=1`` builds an `EngramRuntime`; ``replicas>1`` a `Router`
     (with `policy` dispatch and, when the config carries cache rows, one
     `shared_cache` across the fleet). All other kwargs reach `Engine`.
-    Requests are submitted when their `arrival_step` comes up, interleaved
-    with `step()`s, then the fleet is drained.
+    Requests are submitted when their arrival comes up — a serving step
+    for `batch`/`paced` workloads, a *virtual-clock* instant for
+    `poisson` offered load (an idle fleet fast-forwards to the next
+    arrival; a busy one meets it mid-flight) — interleaved with
+    `step()`s, then the fleet is drained.
     """
     specs = workload.build(cfg.vocab_size)
     if replicas > 1:
@@ -72,12 +87,24 @@ def serve(cfg, workload: Workload, *, pool=None, replicas: int = 1,
     if warmup:
         for eng in _engines(frontend):
             eng.warmup()
+
+    def due(spec, step_no: int) -> bool:
+        if spec.arrival_s is not None:
+            return spec.arrival_s <= frontend.now_s
+        return spec.arrival_step <= step_no
+
     handles = []
     i, step_no = 0, 0
     while i < len(specs) or frontend.busy:
-        while i < len(specs) and specs[i].arrival_step <= step_no:
+        if (not frontend.busy and i < len(specs)
+                and specs[i].arrival_s is not None):
+            # idle fleet, future offered-load arrival: jump the clock
+            frontend.advance_to(specs[i].arrival_s)
+        while i < len(specs) and due(specs[i], step_no):
             handles.append(frontend.submit(list(specs[i].prompt),
-                                           specs[i].max_new))
+                                           specs[i].max_new,
+                                           arrival_s=specs[i].arrival_s,
+                                           klass=specs[i].klass))
             i += 1
         if frontend.busy:
             frontend.step()

@@ -43,7 +43,11 @@ ONE device->host array through ``_host()``:
     with its keys already on host (``_next_keys``), so its charge + miss
     fetch need zero additional syncs;
   * the speculative wave pulls one packed (B, m, L, T) key tensor and one
-    fused (B, m+1) verdict ([preds | n_accept]);
+    fused (B, m+1) verdict ([preds | n_accept]); when pipelined proposals
+    are on and EVERY live slot's prediction survived, the key tensor was
+    already packed host-side from the prediction
+    (``core.hashing.host_block_keys``, bit-identical) — the verdict is
+    the wave's ONLY sync;
   * batched admission runs ONE multi-slot prefill per prompt bucket (not
     one batch-1 jit call per queued request) whose single pull carries
     [first tokens | the whole group's prompt keys], and the store is
@@ -85,13 +89,15 @@ from ..configs.base import ModelConfig, SpecConfig
 from ..core.engram import retrieve
 from ..core.hashing import (block_engram_indices, block_engram_keys,
                             decode_engram_indices, decode_engram_keys,
-                            engram_indices, pack_segment_keys)
+                            engram_indices, host_block_keys,
+                            pack_segment_keys)
 from ..models.model import (build_decode_step, build_prefill_step,
                             init_decode_state, init_params)
 from ..models.transformer import RunFlags
 from ..pool.scheduler import PrefetchScheduler
 from ..pool.store import TableFetcher, make_store
 from ..pool.tiers import TIERS
+from .clock import VirtualClock
 from .slots import update_slots
 
 
@@ -105,6 +111,12 @@ class Request:
     first_token_s: float = 0.0
     done_s: float = 0.0
     status: str = "queued"           # queued | running | done | cancelled
+    klass: str = "uniform"           # workload traffic class (zipf|uniform)
+    # virtual-clock lifecycle stamps (serving/clock.py): deterministic
+    # TTFT/latency under offered load, independent of host wall time
+    submitted_v: float = 0.0
+    first_token_v: float = 0.0
+    done_v: float = 0.0
 
 
 def _rate(num: float, den: float) -> float:
@@ -124,6 +136,9 @@ class EngineStats:
     wall_s: float = 0.0
     stall_s: float = 0.0
     emu_time_s: float = 0.0          # accumulated emulated step + stall time
+    # --- virtual clock ----------------------------------------------------
+    v_time_s: float = 0.0            # replica cursor position (clock time)
+    ttft_v_sum: float = 0.0          # summed virtual submit -> first token
     # --- request lifecycle ------------------------------------------------
     requests_completed: int = 0
     requests_cancelled: int = 0
@@ -134,6 +149,8 @@ class EngineStats:
     accepted_tokens: int = 0         # drafts that survived verification
     pipelined_hits: int = 0          # slot-waves served by a pipelined block
     pipelined_misses: int = 0        # predictions invalidated by verification
+    # per-workload-class proposer quality: {klass: {proposed, accepted}}
+    spec_by_class: dict = dataclasses.field(default_factory=dict)
     # --- hot path ---------------------------------------------------------
     d2h_pulls: int = 0               # device->host syncs through _host()
 
@@ -170,19 +187,30 @@ class EngineStats:
         """Mean submit -> first-token latency over admitted requests."""
         return _rate(self.ttft_s_sum, self.prefills)
 
+    @property
+    def mean_ttft_v(self) -> float:
+        """Mean *virtual* TTFT (offered-load arrival -> first token on the
+        fleet clock) over admitted requests."""
+        return _rate(self.ttft_v_sum, self.prefills)
+
     def merge(self, other: "EngineStats") -> "EngineStats":
         """Aggregate another replica's counters into this one (the router's
-        fleet view). Counters add; the clock quantities ``wall_s`` and
-        ``emu_time_s`` take the max — replicas model parallel hardware
-        sharing one clock, not a serial loop (summing them would halve
-        the fleet's reported throughput per doubling of DP)."""
+        fleet view). Counters add; the clock quantities ``wall_s``,
+        ``emu_time_s``, and ``v_time_s`` take the max — replicas model
+        parallel hardware sharing one clock, not a serial loop (summing
+        them would halve the fleet's reported throughput per doubling of
+        DP). Dict fields (per-class speculation) merge key-wise."""
         for f in dataclasses.fields(self):
-            if f.name in ("wall_s", "emu_time_s"):
-                setattr(self, f.name,
-                        max(getattr(self, f.name), getattr(other, f.name)))
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            if f.name in ("wall_s", "emu_time_s", "v_time_s"):
+                setattr(self, f.name, max(a, b))
+            elif isinstance(a, dict):
+                for k, sub in b.items():
+                    tgt = a.setdefault(k, {})
+                    for kk, vv in sub.items():
+                        tgt[kk] = tgt.get(kk, 0) + vv
             else:
-                setattr(self, f.name,
-                        getattr(self, f.name) + getattr(other, f.name))
+                setattr(self, f.name, a + b)
         return self
 
 
@@ -199,7 +227,7 @@ class Engine:
                  emulate_step_s: Optional[float] = None,
                  spec: Optional[SpecConfig] = None, proposer=None,
                  store=None, name: Optional[str] = None,
-                 rid_start: int = 0):
+                 rid_start: int = 0, clock: Optional[VirtualClock] = None):
         """``emulate_step_s``: evaluate the pool stalls at a production
         operating point (ms-scale decode steps) instead of this host's
         CPU step times — stalls are then accounted in ``emu_time_s``
@@ -212,7 +240,11 @@ class Engine:
         the router's DP front-end) instead of building one from the
         config; ``name``: replica label for router stats; ``rid_start``:
         base of this engine's request-id space (the router gives each
-        replica a disjoint range so fleet-wide rids stay unique)."""
+        replica a disjoint range so fleet-wide rids stay unique);
+        ``clock``: the fleet ``VirtualClock`` (serving/clock.py) — the
+        router shares one across replicas so their waves and store
+        transfers interleave on a single timeline; a lone engine gets a
+        private clock."""
         assert not cfg.is_encoder, "serving needs a decoder"
         self.cfg = cfg
         self.name = name
@@ -222,6 +254,8 @@ class Engine:
         self.prompt_bucket = prompt_bucket
         self.pool = TIERS[pool] if pool else None
         self.emulate_step_s = emulate_step_s
+        self.clock = clock if clock is not None else VirtualClock()
+        self.cursor = self.clock.cursor(name if name else "engine")
         self.params = params if params is not None else init_params(cfg, seed)
         self.has_engram = bool(cfg.engram_layers()) and "engram" in self.params
         self._n_eng = len(cfg.engram_layers())
@@ -237,8 +271,19 @@ class Engine:
         self.scheduler = None
         self._fetchers = None
         if self.has_engram:
+            # link contention is modelled only at the emulated operating
+            # point, where wave cadence is clock-driven and replica
+            # cursors are commensurate. In real mode the cursor mirrors
+            # host wall time (compile noise, serialized replicas), so
+            # cross-replica queueing would double-count what the host
+            # already serializes — and sleep the bogus wait.
+            link_clock = self.clock if emulate_step_s is not None else None
             self.store = store if store is not None \
-                else make_store(cfg.engram, pool)
+                else make_store(cfg.engram, pool, clock=link_clock)
+            if hasattr(self.store, "bind_cursor"):
+                # the store's link reservations run on this replica's
+                # timeline position (contention is cross-replica)
+                self.store.bind_cursor(self.cursor)
             self.scheduler = PrefetchScheduler(self.store, cfg.engram,
                                                layers=cfg.engram_layers(),
                                                n_layers=cfg.n_layers)
@@ -310,14 +355,29 @@ class Engine:
         self._tokens_host = np.zeros((max_batch,), np.int64)  # self.tokens
         self._next_keys: Optional[np.ndarray] = None  # (B,1,L,T) prefetched
         self._prompt_buf = np.zeros((max_batch, prompt_bucket), np.int32)
-        self._pipelined: dict[int, tuple] = {}        # slot -> prediction
+        # slot -> (base_len, expected_tail, next_drafts, host_keys, resv):
+        # the pipelined prediction for the slot's next wave, plus (pool
+        # mode) the host-packed keys that make a fully-hit spec wave
+        # single-sync and the clock link reservation its prefetch booked
+        self._pipelined: dict[int, tuple] = {}
 
     # ------------------------------------------------------------ public API
 
-    def submit(self, prompt: list, max_new: int = 16) -> int:
+    def submit(self, prompt: list, max_new: int = 16,
+               arrival_s: Optional[float] = None,
+               klass: str = "uniform") -> int:
+        """Queue a request. ``arrival_s``: its arrival time on the fleet's
+        virtual clock (offered-load workloads); an idle replica fast-
+        forwards to it, a busy one queues the request from that instant —
+        the difference is measured queueing delay in the virtual TTFT."""
         self._rid += 1
+        if arrival_s is not None:
+            self.cursor.advance_to(arrival_s)
         req = Request(self._rid, list(prompt), max_new,
-                      submitted_s=time.perf_counter())
+                      submitted_s=time.perf_counter(),
+                      klass=klass or "uniform",
+                      submitted_v=arrival_s if arrival_s is not None
+                      else self.cursor.now_s)
         self.queue.append(req)
         return self._rid
 
@@ -357,16 +417,25 @@ class Engine:
             if req is not None and req.rid == rid:
                 self.slots[slot] = None
                 self._free.append(slot)
-                self._pipelined.pop(slot, None)
+                self._drop_pipelined(slot)
                 if self.proposer is not None:
                     self.proposer.end(slot)
                 self._mark_cancelled(req)
                 return True
         return False
 
+    def _drop_pipelined(self, slot: int) -> None:
+        """Discard a slot's pipelined prediction and REFUND the clock-link
+        bandwidth its queued speculative prefetch had booked — a cancelled
+        request's in-flight transfer stops delaying other replicas."""
+        pipe = self._pipelined.pop(slot, None)
+        if pipe is not None and pipe[4] is not None:
+            self.clock.refund(pipe[4])
+
     def _mark_cancelled(self, req: Request) -> None:
         req.status = "cancelled"
         req.done_s = time.perf_counter()
+        req.done_v = self.cursor.now_s
         self.cancelled[req.rid] = req
         self.stats.requests_cancelled += 1
 
@@ -444,6 +513,8 @@ class Engine:
         charge = [[] for _ in range(self._n_eng)] if self._pool_mode else None
         for S, group in sorted(groups.items()):
             n = len(group)
+            self.cursor.next_wave()
+            t_g = time.perf_counter()
             # pad the group batch to a power of two: admission traces stay
             # O(log max_batch) shapes per prompt bucket instead of one per
             # group size (a churny serve loop would recompile every wave).
@@ -475,6 +546,10 @@ class Engine:
                     for j in range(self._n_eng):
                         charge[j].append(live[:, j, :].reshape(-1))
             t_now = time.perf_counter()
+            # the group's prefill is one batched step on the timeline
+            self.cursor.advance(self.emulate_step_s
+                                if self.emulate_step_s is not None
+                                else t_now - t_g)
             for r, (slot, req) in enumerate(group):
                 tok = int(toks[r])
                 req.out.append(tok)
@@ -493,6 +568,15 @@ class Engine:
             # one fused charge: the admission wave's full prompt-key
             # stream per layer (a configured hot-row cache warms on it)
             self._charge_wave([np.concatenate(c) for c in charge])
+        # virtual first-token stamps AFTER the fused charge: the prompt
+        # retrieval's stall is part of the admission wave, so the
+        # tier-dependent term lands in every admitted request's TTFT_v
+        t_v = self.cursor.now_s
+        for req, _, finished, _ in events:
+            req.first_token_v = t_v
+            self.stats.ttft_v_sum += t_v - req.submitted_v
+            if finished:
+                req.done_v = t_v
         self._next_keys = None      # decode keys were computed pre-admit
         return events
 
@@ -541,6 +625,7 @@ class Engine:
         if not active:
             return []
         t0 = time.perf_counter()
+        self.cursor.next_wave()
         B = self.max_batch
         if self.emulate_step_s is not None:
             self.stats.emu_time_s += self.emulate_step_s
@@ -586,7 +671,13 @@ class Engine:
         else:
             toks = self._host(new_tok)
         self._tokens_host[:] = toks
-        self._step_times.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self._step_times.append(dt)
+        # the wave's compute on the timeline (real runs already slept the
+        # stall inside _charge_wave, so dt covers it; emulated runs add
+        # the stall advance in _charge_wave itself)
+        self.cursor.advance(self.emulate_step_s
+                            if self.emulate_step_s is not None else dt)
         self.stats.decode_steps += 1
         events = []
         for i in active:
@@ -625,44 +716,80 @@ class Engine:
     def _propose_block(self, active, k: int) -> tuple:
         """Build the wave's (B, m) block on the host: pending tokens from
         the host mirror (no device pull), drafts from surviving pipelined
-        predictions where available, else fresh proposals."""
+        predictions where available, else fresh proposals. Returns the
+        block, the hit set, and the surviving host-packed key tensors
+        ``{slot: (m, L, T)}`` (the single-sync path's device-pull skip)."""
         B = self.max_batch
         block = np.zeros((B, k + 1), np.int32)
         block[:, 0] = self._tokens_host
         hits = set()
+        pipe_keys: dict[int, np.ndarray] = {}
+        pipes = {i: self._pipelined.pop(i, None) for i in active}
+        # settle the queued prefetch bookings NEWEST-FIRST: Link.refund
+        # only rolls back the tail, and the bookings were made in slot
+        # order, so LIFO unwinds the whole batch (each rollback exposes
+        # the previous booking as the new tail) — ascending order would
+        # leak every booking but the last onto the link each wave. Either
+        # way the wave re-charges through the normal path: a surviving
+        # prediction at the same timeline position, a miss with the real
+        # keys.
+        for pipe in [p for p in pipes.values() if p is not None][::-1]:
+            if pipe[4] is not None:
+                self.clock.refund(pipe[4])
         for i in active:
             req = self.slots[i]
             stream = req.prompt + req.out
             drafts = None
-            pipe = self._pipelined.pop(i, None)
+            pipe = pipes[i]
             if pipe is not None:
-                base_len, expected_tail, next_drafts = pipe
+                base_len, expected_tail, next_drafts, pkeys, resv = pipe
                 if (len(stream) == base_len + len(expected_tail)
                         and stream[base_len:] == expected_tail):
                     drafts = next_drafts
                     hits.add(i)
+                    if pkeys is not None:
+                        pipe_keys[i] = pkeys
                     self.stats.pipelined_hits += 1
                 else:
                     self.stats.pipelined_misses += 1
             if drafts is None:
                 drafts = self.proposer.propose(i, stream, k)
             block[i, 1:] = drafts
-        return block, hits
+        return block, hits, pipe_keys
 
     def _pipeline_proposals(self, active, block: np.ndarray, k: int) -> None:
         """Draft wave N+1's blocks while wave N's verify is in flight (the
         verify was dispatched asynchronously; this host work overlaps it).
         The optimistic context assumes full acceptance; the prediction is
         used next wave only if the emitted tail — accepted drafts plus the
-        bonus token — matches it exactly."""
+        bonus token — matches it exactly.
+
+        Pool mode additionally packs the predicted block's segment keys
+        HOST-side (``core.hashing.host_block_keys``, bit-identical to the
+        device path) and books the prefetch's occupancy on the pool's
+        clock link now — the transfer is in flight during the verify. If
+        every live slot's prediction survives, the next spec wave needs no
+        device key pull at all (one sync: the fused verdict); the booking
+        is refunded when the prediction is consumed or the request is
+        cancelled mid-flight."""
+        e = self.cfg.engram
+        o = max(e.orders) if self.has_engram else 1
+        reserve = getattr(self.store, "reserve_prefetch", None)
         for i in active:
             req = self.slots[i]
             stream = req.prompt + req.out
             drafts = [int(t) for t in block[i, 1:]]
-            ahead = self.proposer.propose(i, stream + drafts, k + 1)
+            ahead = [int(t) for t in
+                     self.proposer.propose(i, stream + drafts, k + 1)]
+            pkeys = resv = None
+            if self._pool_mode and len(stream) + len(drafts) >= o - 1:
+                pkeys = host_block_keys(e, stream + drafts, ahead,
+                                        self._n_eng)
+                if reserve is not None:
+                    resv = reserve(int(np.unique(pkeys).size))
             # surviving tail = this wave's drafts + the predicted bonus
-            self._pipelined[i] = (len(stream), drafts + [int(ahead[0])],
-                                  [int(t) for t in ahead[1:]])
+            self._pipelined[i] = (len(stream), drafts + [ahead[0]],
+                                  ahead[1:], pkeys, resv)
 
     def _spec_wave(self) -> list:
         """One speculative wave: propose k drafts per live slot, prefetch
@@ -677,11 +804,12 @@ class Engine:
         if not active:
             return []
         t0 = time.perf_counter()
+        self.cursor.next_wave()
         k = self.spec.max_draft
         m = k + 1
         B = self.max_batch
 
-        block, pipe_hits = self._propose_block(active, k)
+        block, pipe_hits, pipe_keys = self._propose_block(active, k)
         block_j = jnp.asarray(block)
 
         # the verify pass costs ~one decode step (memory-bound) plus a
@@ -695,11 +823,24 @@ class Engine:
         rows = None
         if self.has_engram:
             if self._pool_mode:
-                # ONE packed pull covers every (position, slot, layer)
-                # stream; numpy views replace the old per-cell Python
-                # packing nest, and the scheduler dedups with one sort
-                keys = self._host(self._block_keys(
-                    self.state["last_tokens"], block_j))     # (B,m,L,T)
+                all_hit = bool(active) and \
+                    all(i in pipe_keys for i in active)
+                if all_hit:
+                    # SINGLE-SYNC wave: every live slot's block was
+                    # predicted last wave and its keys packed host-side
+                    # (bit-identical to the device path) — skip the
+                    # packed-key pull; the fused verdict is the wave's
+                    # only device->host transfer
+                    keys = np.zeros((B, m, self._n_eng,
+                                     self.cfg.engram.n_tables), np.int64)
+                    for i in active:
+                        keys[i] = pipe_keys[i]
+                else:
+                    # ONE packed pull covers every (position, slot, layer)
+                    # stream; numpy views replace the old per-cell Python
+                    # packing nest, and the scheduler dedups with one sort
+                    keys = self._host(self._block_keys(
+                        self.state["last_tokens"], block_j))  # (B,m,L,T)
                 act = np.asarray(active)
                 ka = keys[act]                               # (A,m,L,T)
                 keys_by_pos = [
@@ -754,8 +895,12 @@ class Engine:
                     time.sleep(stall)
             else:
                 self.stats.emu_time_s += stall
+                self.cursor.advance(stall)
 
-        self._step_times.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self._step_times.append(dt)
+        self.cursor.advance(verify_s if self.emulate_step_s is not None
+                            else dt)
         self.stats.decode_steps += 1
         self.stats.spec_waves += 1
         events = []
@@ -768,6 +913,10 @@ class Engine:
             self.stats.generated_tokens += len(emit)
             self.stats.proposed_tokens += k
             self.stats.accepted_tokens += a
+            by = self.stats.spec_by_class.setdefault(
+                req.klass or "uniform", {"proposed": 0, "accepted": 0})
+            by["proposed"] += k
+            by["accepted"] += a
             self.proposer.observe(i, req.prompt + req.out)
             events.append((req, emit, self._finish_if_done(i),
                            len(req.out) - len(emit)))
@@ -777,11 +926,12 @@ class Engine:
         req = self.slots[slot]
         if req is not None and len(req.out) >= req.max_new:
             req.done_s = time.perf_counter()
+            req.done_v = self.cursor.now_s
             req.status = "done"
             self.done[req.rid] = req
             self.slots[slot] = None
             self._free.append(slot)
-            self._pipelined.pop(slot, None)
+            self._drop_pipelined(slot)
             self.stats.requests_completed += 1
             if self.proposer is not None:
                 self.proposer.end(slot)
@@ -815,4 +965,7 @@ class Engine:
                 time.sleep(report.stall_s)
         else:
             self.stats.emu_time_s += report.stall_s
+            # emulated stalls advance the virtual cursor here; real stalls
+            # are slept and land in the wave's measured dt
+            self.cursor.advance(report.stall_s)
         return report.gather(self.store) if fetch is not None else None

@@ -32,6 +32,8 @@ from ..core.hashing import engram_indices
 from ..models.model import init_params
 from ..pool.cache import SharedCache, SharedCacheStats, TinyLFUAdmission
 from ..pool.store import make_store, segment_keys
+from ..pool.tiers import TIERS
+from .clock import VirtualClock
 from .engine import Engine, EngineStats
 from .runtime import EngramRuntime, RequestHandle, TokenEvent
 
@@ -45,6 +47,8 @@ class RouterStats:
     aggregate: EngineStats
     per_replica: dict
     cache: Optional[SharedCacheStats] = None
+    migrations: int = 0                 # mid-flight re-dispatches
+    clock: Optional[dict] = None        # VirtualClock.stats() snapshot
 
     @property
     def cache_hit_rate(self) -> float:
@@ -60,12 +64,24 @@ class RouterStats:
     @property
     def speculation(self) -> dict:
         """Fleet + per-replica speculation metrics in one dict — the
-        router-level counterpart of ``EngineStats``' spec counters."""
+        router-level counterpart of ``EngineStats``' spec counters.
+        ``by_class`` splits proposer quality by workload traffic class
+        (zipf vs uniform prompts — the n-gram proposer's acceptance is a
+        property of the traffic's reuse, so the split is the metric that
+        says *which* traffic speculation is paying for)."""
+        by_class = {
+            klass: {"proposed_tokens": d.get("proposed", 0),
+                    "accepted_tokens": d.get("accepted", 0),
+                    "acceptance_rate": (d.get("accepted", 0)
+                                        / d["proposed"]
+                                        if d.get("proposed") else 0.0)}
+            for klass, d in self.aggregate.spec_by_class.items()}
         return {
             "proposed_tokens": self.aggregate.proposed_tokens,
             "accepted_tokens": self.aggregate.accepted_tokens,
             "acceptance_rate": self.aggregate.acceptance_rate,
             "pipeline_hit_rate": self.aggregate.pipeline_hit_rate,
+            "by_class": by_class,
             "per_replica": {
                 name: {"proposed_tokens": s.proposed_tokens,
                        "accepted_tokens": s.accepted_tokens,
@@ -77,21 +93,50 @@ class RouterStats:
 class Router:
     def __init__(self, cfg, *, replicas: int = 2, pool: Optional[str] = None,
                  policy: str = "round_robin", shared_cache: bool = True,
-                 params=None, seed: int = 0, **engine_kwargs):
+                 params=None, seed: int = 0,
+                 redispatch: Optional[bool] = None,
+                 redispatch_skew: int = 2, **engine_kwargs):
         """``shared_cache``: mount one `SharedCache` across all replicas
         (needs ``pool`` and ``cfg.engram.store.cache_rows > 0``); False
         keeps the per-replica private caches `make_store` would build —
-        the baseline the shared cache is measured against."""
+        the baseline the shared cache is measured against.
+
+        ``redispatch``: continuous re-dispatch — every `step()` the router
+        re-examines fleet load on the shared clock and migrates *queued*
+        (not yet admitted) requests off a replica whose backlog exceeds
+        the least-loaded replica's by ``redispatch_skew``. Defaults to on
+        for `least_loaded` (dispatch-time balance decays as completion
+        times diverge mid-flight) and off for `cache_affinity` (migration
+        would defeat proposer/KV warmth) and `round_robin`."""
         assert replicas >= 1, replicas
         assert policy in POLICIES, (policy, POLICIES)
         self.cfg = cfg
         self.policy = policy
+        self.redispatch = (policy == "least_loaded") if redispatch is None \
+            else bool(redispatch)
+        self.redispatch_skew = max(1, int(redispatch_skew))
+        self.migrations = 0
+        # ONE timeline for the fleet: every replica's waves and store
+        # transfers interleave on it (serving/clock.py)
+        self.clock = VirtualClock()
         self.shared_cache: Optional[SharedCache] = None
+        cache_link = None
+        # contention links only exist at the emulated operating point
+        # (see Engine.__init__: real-mode cursors mirror wall time, so
+        # cross-replica queueing would double-count host serialization)
+        link_clock = self.clock \
+            if engine_kwargs.get("emulate_step_s") is not None else None
         scfg = cfg.engram.store if cfg.engram is not None else None
         if (shared_cache and pool is not None and scfg is not None
                 and cfg.engram.enabled and scfg.cache_rows > 0):
             adm = TinyLFUAdmission() if scfg.admission == "tinylfu" else None
             self.shared_cache = SharedCache(scfg.cache_rows, admission=adm)
+            # one DRAM channel behind the one shared cache: N replicas
+            # hitting it split its bandwidth (the Table 3 switch model),
+            # unlike private caches which each own a private link
+            if link_clock is not None:
+                cache_link = link_clock.link(
+                    "cache:shared", TIERS[scfg.cache_tier].bandwidth_Bps)
         if params is None:
             params = init_params(cfg, seed)
         self.replicas: list[EngramRuntime] = []
@@ -100,12 +145,13 @@ class Router:
             store = None
             if self.shared_cache is not None:
                 store = make_store(cfg.engram, pool,
-                                   cache=self.shared_cache.view(name))
+                                   cache=self.shared_cache.view(name),
+                                   clock=link_clock, cache_link=cache_link)
             # disjoint rid ranges: fleet-wide request ids stay unique, so
             # merged TokenEvent streams and handle lookups never collide
             eng = Engine(cfg, params=params, pool=pool, seed=seed,
                          store=store, name=name, rid_start=r * 1_000_000,
-                         **engine_kwargs)
+                         clock=self.clock, **engine_kwargs)
             self.replicas.append(eng.runtime())
         self._rr = 0
 
@@ -141,12 +187,70 @@ class Router:
 
     # ------------------------------------------------------------ lifecycle
 
-    def submit(self, prompt, max_new: int = 16) -> RequestHandle:
+    def submit(self, prompt, max_new: int = 16,
+               arrival_s=None, klass: str = "uniform") -> RequestHandle:
         rt = self.replicas[self.select_replica(prompt)]
-        return rt.submit(prompt, max_new)
+        if arrival_s is None:
+            # a router-dispatched request arrives at the fleet's current
+            # decision point: an idle (lagging) target cursor fast-forwards
+            # to it instead of booking link transfers in its virtual past
+            arrival_s = self.now_s
+        return rt.submit(prompt, max_new, arrival_s=arrival_s, klass=klass)
+
+    @property
+    def now_s(self) -> float:
+        """The fleet's decision point on the virtual timeline: the
+        earliest busy replica (it takes the next wave); idle fleets sit
+        at the furthest cursor."""
+        busy = [rt.now_s for rt in self.replicas if rt.busy]
+        return min(busy) if busy else self.clock.now_s
+
+    def advance_to(self, t_s: float) -> None:
+        """Fast-forward every idle replica to a future arrival."""
+        for rt in self.replicas:
+            if not rt.busy:
+                rt.advance_to(t_s)
+
+    def rebalance(self) -> int:
+        """Continuous re-dispatch: migrate queued requests off the most
+        backlogged replica onto the least loaded one while their load gap
+        exceeds ``redispatch_skew`` — dispatch-time balance decays as
+        completion times diverge mid-flight, and a queued request carries
+        no replica state yet, so moving it is free. Newest queued requests
+        move first (FIFO order on the donor is preserved). Returns the
+        number of migrations performed."""
+        moved = 0
+        while True:
+            loads = [self._load(rt) for rt in self.replicas]
+            # donor = most loaded replica that still has QUEUED requests
+            # (a slot-saturated replica with an empty queue has nothing
+            # movable, but another backlogged replica may)
+            donors = [i for i, rt in enumerate(self.replicas)
+                      if rt.engine.queue]
+            if not donors:
+                return moved
+            src = max(donors, key=lambda i: loads[i])
+            dst = int(np.argmin(loads))
+            if loads[src] - loads[dst] < self.redispatch_skew:
+                return moved
+            rt_src, rt_dst = self.replicas[src], self.replicas[dst]
+            req = rt_src.engine.queue.pop()          # newest queued
+            h = rt_src.handles.pop(req.rid, None)
+            # the move happens at the later of the two cursors — a
+            # migration cannot deliver work into a replica's past
+            rt_dst.engine.cursor.advance_to(rt_src.now_s)
+            rt_dst.engine.queue.append(req)
+            if h is not None:
+                h.runtime = rt_dst
+                rt_dst.handles[req.rid] = h
+            self.migrations += 1
+            moved += 1
 
     def step(self) -> list[TokenEvent]:
-        """One serving wave on every busy replica (lockstep DP emulation)."""
+        """One serving wave on every busy replica (lockstep DP emulation),
+        preceded by a re-dispatch pass when enabled."""
+        if self.redispatch and len(self.replicas) > 1:
+            self.rebalance()
         events: list[TokenEvent] = []
         for rt in self.replicas:
             if rt.busy:
@@ -175,7 +279,9 @@ class Router:
             per[rt.engine.name] = rt.stats
         cache = self.shared_cache.stats() if self.shared_cache is not None \
             else None
-        return RouterStats(aggregate=agg, per_replica=per, cache=cache)
+        return RouterStats(aggregate=agg, per_replica=per, cache=cache,
+                           migrations=self.migrations,
+                           clock=self.clock.stats())
 
     def store_stats(self) -> dict:
         """Per-replica `StoreStats` (each replica charges its own waves)."""

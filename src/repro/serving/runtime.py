@@ -39,6 +39,7 @@ class TokenEvent:
     token: int
     index: int                   # position in the request's output stream
     finished: bool               # this token completes the request
+    t_s: float = 0.0             # virtual emission time (serving/clock.py)
 
 
 class RequestHandle:
@@ -136,24 +137,40 @@ class EngramRuntime:
 
     # ----------------------------------------------------------- lifecycle
 
-    def submit(self, prompt, max_new: int = 16) -> RequestHandle:
+    def submit(self, prompt, max_new: int = 16,
+               arrival_s=None, klass: str = "uniform") -> RequestHandle:
         """Queue a request; returns its lifecycle handle. Accepts a token
-        list or a pre-built `Request` (rid is (re)assigned either way)."""
+        list or a pre-built `Request` (rid is (re)assigned either way).
+        ``arrival_s``/``klass``: virtual arrival time and workload class
+        (serving/clock.py, serving/workload.py)."""
         if isinstance(prompt, Request):
-            rid = self.engine.submit(prompt.prompt, prompt.max_new)
+            rid = self.engine.submit(prompt.prompt, prompt.max_new,
+                                     arrival_s=arrival_s,
+                                     klass=getattr(prompt, "klass", klass))
         else:
-            rid = self.engine.submit(list(prompt), max_new)
+            rid = self.engine.submit(list(prompt), max_new,
+                                     arrival_s=arrival_s, klass=klass)
         req = self.engine.queue[-1]
         assert req.rid == rid
         h = RequestHandle(self, req)
         self.handles[rid] = h
         return h
 
+    @property
+    def now_s(self) -> float:
+        """This replica's position on the virtual timeline."""
+        return self.engine.cursor.now_s
+
+    def advance_to(self, t_s: float) -> None:
+        """Fast-forward an idle replica to a future arrival time."""
+        self.engine.cursor.advance_to(t_s)
+
     def step(self) -> list[TokenEvent]:
         """One serving wave: admit queued requests into free slots, then
         one decode (or speculative-verify) pass over the live batch.
         Returns every token emitted this wave as per-request events, in
-        emission order; wall time accrues on the engine's stats."""
+        emission order; wall time accrues on the engine's stats and the
+        wave's virtual duration on its clock cursor."""
         eng = self.engine
         t0 = time.perf_counter()
         raw = eng._admit()
@@ -162,13 +179,15 @@ class EngramRuntime:
         else:
             raw += eng._decode_wave()
         eng.stats.wall_s += time.perf_counter() - t0
+        eng.stats.v_time_s = eng.cursor.now_s
+        t_v = eng.cursor.now_s
         events = []
         for req, emitted, finished, base in raw:
             h = self.handles.get(req.rid)
             for i, tok in enumerate(emitted):
                 last = i == len(emitted) - 1
                 ev = TokenEvent(rid=req.rid, token=tok, index=base + i,
-                                finished=finished and last)
+                                finished=finished and last, t_s=t_v)
                 events.append(ev)
                 if h is not None:
                     h._push(ev)

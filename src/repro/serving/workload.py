@@ -7,13 +7,19 @@ so "the same workload" across a benchmark, an example, and a test was a
 hope, not a property. A `Workload` pins it down:
 
   * arrival process — `"batch"` (everything at t=0, the offline harness
-    shape) or `"paced"` (one request every `arrival_every` serving steps:
-    admission happens *under load*, the regime a pooled tier exists for);
+    shape), `"paced"` (one request every `arrival_every` serving steps:
+    admission happens *under load*), or `"poisson"` (an offered-load
+    arrival process at `qps` requests per *virtual* second on the fleet's
+    `VirtualClock` — the regime where TTFT/p99 curves plot against
+    utilization, serving/clock.py);
   * prompt-pool reuse — `prompt_pool=N` draws prompts from N hot prompts
     (repeat traffic: the hot-row cache's and the n-gram proposer's
     steady state); `prompts=(...)` pins explicit token lists;
   * Zipf skew — `zipf_alpha` makes prompt *tokens* Zipf-distributed (the
-    paper's n-gram reuse model);
+    paper's n-gram reuse model); `zipf_fraction` mixes classes — that
+    fraction of requests is Zipf traffic, the rest uniform — and every
+    request carries its `klass` tag so proposer/cache quality can be
+    broken down per class (RouterStats.speculation);
   * per-request `max_new` — fixed, or varied per request with
     `max_new_jitter` (staggered completions exercise slot churn).
 
@@ -23,6 +29,7 @@ The token streams are bit-compatible with the legacy `run_once` synthesis
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -33,6 +40,8 @@ class RequestSpec:
     prompt: tuple
     max_new: int
     arrival_step: int            # serving step at which the request arrives
+    arrival_s: Optional[float] = None   # virtual arrival time (poisson)
+    klass: str = "uniform"       # traffic class: uniform | zipf
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,26 +52,42 @@ class Workload:
     prompt_pool: int = 0         # draw from N hot prompts (0 = all unique)
     prompts: tuple = ()          # explicit prompt pool (overrides synthesis)
     zipf_alpha: float = 0.0      # Zipf-skewed prompt tokens (0 = uniform)
-    arrival: str = "batch"       # batch | paced
+    zipf_fraction: float = 1.0   # fraction of requests that are Zipf class
+    arrival: str = "batch"       # batch | paced | poisson
     arrival_every: int = 1       # paced: one new request every N steps
+    qps: float = 0.0             # poisson: offered load (virtual req/s)
     seed: int = 0
 
     def __post_init__(self):
-        assert self.arrival in ("batch", "paced"), self.arrival
+        assert self.arrival in ("batch", "paced", "poisson"), self.arrival
         assert self.requests >= 0 and self.max_new >= 1
+        assert 0.0 <= self.zipf_fraction <= 1.0, self.zipf_fraction
+        if self.arrival == "poisson":
+            assert self.qps > 0.0, "poisson arrivals need qps > 0"
 
     def build(self, vocab_size: int) -> list[RequestSpec]:
         """Materialize the request list (deterministic in `seed`)."""
         rng = np.random.RandomState(self.seed)
+        # one exponential-gap draw per request: t_r = sum of Exp(1/qps)
+        arrivals_s = None
+        if self.arrival == "poisson":
+            gaps = np.random.RandomState(self.seed ^ 0x5EED).exponential(
+                1.0 / self.qps, size=self.requests)
+            arrivals_s = np.cumsum(gaps)
         out = []
         for r in range(self.requests):
             pr = int(rng.randint(self.prompt_pool)) if self.prompt_pool else r
+            # golden-ratio scatter: class mixing is equidistributed even
+            # over tiny request counts (a plain prefix split would make
+            # small workloads single-class)
+            zipf = bool(self.zipf_alpha) and \
+                ((pr * 0x9E3779B9) & 0xFFFFFFFF) / 2**32 < self.zipf_fraction
             if self.prompts:
                 prompt = tuple(int(t) for t in
                                self.prompts[pr % len(self.prompts)])
             else:
                 plen = 4 + (pr * 7) % 20
-                if self.zipf_alpha:
+                if zipf:
                     from ..pool.cache import zipf_keys
                     toks = 1 + zipf_keys(plen, vocab_size - 1,
                                          alpha=self.zipf_alpha,
@@ -75,8 +100,11 @@ class Workload:
             max_new = self.max_new
             if self.max_new_jitter:
                 max_new += r % (self.max_new_jitter + 1)
-            arrival = 0 if self.arrival == "batch" \
+            arrival = 0 if self.arrival != "paced" \
                 else r * max(1, self.arrival_every)
-            out.append(RequestSpec(prompt=prompt, max_new=max_new,
-                                   arrival_step=arrival))
+            out.append(RequestSpec(
+                prompt=prompt, max_new=max_new, arrival_step=arrival,
+                arrival_s=float(arrivals_s[r]) if arrivals_s is not None
+                else None,
+                klass="zipf" if zipf else "uniform"))
         return out

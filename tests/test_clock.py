@@ -1,0 +1,364 @@
+"""Virtual-clock traffic model: link contention semantics, RDMA payload
+aggregation, Poisson offered-load workloads, the engine<->simulator
+one-code-path stall regression, single-sync pipelined speculation, and
+mid-flight cancel refunds on the clock."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conftest import reduced
+
+from repro.configs.base import SpecConfig, StoreConfig
+from repro.core.hashing import block_engram_keys, host_block_keys
+from repro.models.model import init_params
+from repro.pool.simulator import replay_stall_s
+from repro.pool.store import CachedStore, Segments, TierStore, segment_bytes
+from repro.pool.tiers import RDMA, RDMA_AGG, TIERS
+from repro.serving import Engine, VirtualClock, Workload, serve
+from repro.spec import ScriptedProposer
+
+
+def tiny_cfg(cache_rows: int = 0):
+    cfg = reduced("deepseek-7b")
+    e = dataclasses.replace(cfg.engram, layers=(1,),
+                            store=StoreConfig(cache_rows=cache_rows))
+    return dataclasses.replace(cfg, n_layers=3, layer_types=("attn",) * 3,
+                               attn_kinds=("global",) * 3,
+                               ffn_types=("dense",) * 3, engram=e)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return tiny_cfg()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, 0)
+
+
+# ------------------------------------------------------------ clock + links
+
+def test_link_reserve_queues_and_refunds():
+    clock = VirtualClock()
+    link = clock.link("tier:X", 1e9)
+    # two waves at the same instant from different wave tags: the second
+    # queues behind the first's occupancy
+    w1, t1 = link.reserve(0.0, 5e-6, nbytes=100, wave=("a", 0))
+    w2, t2 = link.reserve(0.0, 3e-6, nbytes=60, wave=("b", 0))
+    assert w1 == 0.0
+    assert w2 == pytest.approx(5e-6)
+    assert link.free_at_s == pytest.approx(8e-6)
+    assert link.contended == 1
+    # refunding the queued transfer rolls the horizon back
+    assert clock.refund(t2)
+    assert link.free_at_s == pytest.approx(5e-6)
+    assert clock.refunded_bytes == 60
+    assert not clock.refund(t2)                 # double refund is a no-op
+    # after the link drains, a later wave pays no wait
+    w3, _ = link.reserve(10e-6, 1e-6, wave=("a", 1))
+    assert w3 == 0.0
+
+
+def test_refund_lifo_unwinds_whole_batch():
+    """Refund only rolls back the link tail (a mid-queue rollback would
+    double-book later transfers), so a batch of sequential bookings must
+    be refunded newest-first — each rollback exposes the previous booking
+    as the new tail and the horizon unwinds completely (the engine's
+    refund-then-recharge path per speculative wave)."""
+    clock = VirtualClock()
+    link = clock.link("tier:X", 1e9)
+    t0 = link.free_at_s
+    batch = [link.reserve(0.0, 1e-6)[1] for _ in range(3)]
+    assert link.free_at_s == pytest.approx(3e-6)
+    for tr in batch[::-1]:                       # LIFO: full unwind
+        assert clock.refund(tr)
+    assert link.free_at_s == t0
+    # FIFO order would leak: only the tail rolls back
+    batch = [link.reserve(0.0, 1e-6)[1] for _ in range(3)]
+    for tr in batch:
+        clock.refund(tr)
+    assert link.free_at_s > t0                   # conservative leftover
+
+
+def test_same_wave_reservations_share_start():
+    """One engine wave's per-layer fetches are a single batched access:
+    they must not queue behind each other (a lone replica charges exactly
+    the uncontended tier model)."""
+    clock = VirtualClock()
+    link = clock.link("tier:X", 1e9)
+    tag = ("r0", 7)
+    w1, _ = link.reserve(0.0, 4e-6, wave=tag)
+    w2, _ = link.reserve(0.0, 4e-6, wave=tag)
+    assert w1 == 0.0 and w2 == 0.0              # same wave: parallel
+    assert link.free_at_s == pytest.approx(8e-6)  # occupancy accumulates
+
+
+def test_tier_store_waits_on_contended_link(cfg):
+    """Two replicas' stores on one clock link: the second wave's handle
+    carries the first's occupancy as wait; private clocks pay zero."""
+    e = cfg.engram
+    keys = np.arange(256, dtype=np.int64)
+    clock = VirtualClock()
+    s1 = TierStore(e, "CXL", clock=clock)
+    s2 = TierStore(e, "CXL", clock=clock)
+    s1.bind_cursor(clock.cursor("r1"))
+    s2.bind_cursor(clock.cursor("r2"))
+    h1 = s1.prefetch(keys)
+    h2 = s2.prefetch(keys)
+    assert h1.wait_s == 0.0
+    assert h2.wait_s == pytest.approx(s1.occupancy_s(h1.n_segments))
+    assert h2.latency_s == pytest.approx(h1.latency_s + h2.wait_s)
+    assert s2.stats().wait_s == h2.wait_s
+    # same wave replayed on two *private* clocks: no cross-talk
+    p1 = TierStore(e, "CXL", clock=VirtualClock())
+    p1.bind_cursor(VirtualClock().cursor("r1"))
+    assert p1.prefetch(keys).wait_s == 0.0
+
+
+def test_shared_cache_link_splits_bandwidth(cfg):
+    """The Table 3 switch model at store level: two CachedStores hitting
+    ONE cache link queue on it; private cache links don't."""
+    e = cfg.engram
+    keys = np.arange(512, dtype=np.int64)
+
+    def build(shared):
+        clock = VirtualClock()
+        link = clock.link("cache:shared", 1e9) if shared else None
+        stores = []
+        for r in range(2):
+            s = CachedStore(TierStore(e, "RDMA", clock=clock),
+                            clock=clock, cache_link=link)
+            s.bind_cursor(clock.cursor(f"r{r}"))
+            stores.append(s)
+        return stores
+
+    for s in build(shared=True) + build(shared=False):
+        s.prefetch(keys)                        # cold: all miss
+    sh = build(shared=True)
+    pv = build(shared=False)
+    # warm charge: explicit all-hit split (cacheless Segments bypass)
+    hits = Segments(hits=keys.size, misses=0)
+    sh_waits = [s.prefetch(hits).wait_s for s in sh]
+    pv_waits = [s.prefetch(hits).wait_s for s in pv]
+    assert sh_waits[0] == 0.0 and pv_waits == [0.0, 0.0]
+    assert sh_waits[1] == pytest.approx(
+        TIERS["DRAM"].service_s(keys.size, segment_bytes(e)))
+
+
+# ------------------------------------------------- RDMA payload aggregation
+
+def test_rdma_agg_charges_one_payload_per_wave(cfg):
+    """Satellite: the rdma-agg tier charges ONE batched scatter-gather
+    payload per wave through TierStore — the per-row software/device
+    markup the plain RDMA tier pays is gone."""
+    e = cfg.engram
+    seg = segment_bytes(e)
+    agg = TierStore(e, "RDMA-agg")
+    row = TierStore(e, "RDMA")
+    n = 1024
+    keys = np.arange(n, dtype=np.int64)
+    h_agg = agg.prefetch(keys)
+    h_row = row.prefetch(keys)
+    # one payload: base RTT + max(single first access, wire)
+    wire = n * seg / RDMA_AGG.bandwidth_Bps
+    assert h_agg.latency_s == pytest.approx(
+        RDMA_AGG.base_latency_s + max(RDMA_AGG.segment_latency_s, wire))
+    # the per-row path pays per-message software on every segment
+    assert h_row.latency_s >= RDMA.per_message_s * n
+    assert h_agg.latency_s < h_row.latency_s
+    # charge totals accumulate the same way (one wave each)
+    assert agg.stats().retrieval_s == pytest.approx(h_agg.latency_s)
+    assert row.stats().retrieval_s == pytest.approx(h_row.latency_s)
+    # splitting an aggregated wave in two pays a second payload RTT
+    two = TierStore(e, "RDMA-agg")
+    two.prefetch(keys[:n // 2])
+    two.prefetch(keys[n // 2:])
+    assert two.stats().retrieval_s > agg.stats().retrieval_s
+    assert two.stats().retrieval_s == pytest.approx(
+        agg.stats().retrieval_s + RDMA_AGG.base_latency_s, rel=0.2)
+
+
+# ------------------------------------------------------ offered-load model
+
+def test_poisson_workload_build():
+    w = Workload(requests=32, arrival="poisson", qps=1000.0,
+                 zipf_alpha=1.2, zipf_fraction=0.5, seed=3)
+    specs = w.build(vocab_size=1000)
+    times = [s.arrival_s for s in specs]
+    assert all(t is not None and t > 0 for t in times)
+    assert times == sorted(times)               # cumulative gaps
+    classes = {s.klass for s in specs}
+    assert classes == {"zipf", "uniform"}       # mixed traffic
+    # deterministic in seed
+    assert [s.arrival_s for s in w.build(1000)] == times
+    # batch workloads keep the legacy step-arrival contract
+    b = Workload(requests=4, zipf_alpha=1.2).build(1000)
+    assert all(s.arrival_s is None for s in b)
+    assert all(s.klass == "zipf" for s in b)    # fraction defaults to 1.0
+
+
+def test_poisson_ttft_grows_with_offered_load(cfg, params):
+    """Virtual TTFT percentiles are deterministic and rise with QPS: at
+    saturation requests queue on the virtual timeline."""
+    def drive(qps):
+        w = Workload(requests=8, max_new=4, arrival="poisson", qps=qps,
+                     seed=1)
+        res = serve(cfg, w, pool="CXL", params=params, max_batch=2,
+                    max_len=32, prompt_bucket=8, emulate_step_s=2e-4)
+        return res
+
+    lo = drive(200.0)
+    hi = drive(50_000.0)
+    t_lo, t_hi = lo.ttft_v(), hi.ttft_v()
+    assert len(t_lo) == len(t_hi) == 8
+    assert all(t >= 0 for t in t_lo)
+    assert np.median(t_hi) > np.median(t_lo)
+    # low load: arrivals sparse -> TTFT ~ one prefill wave; saturation:
+    # queueing dominates and the fleet drains later than it admits
+    assert lo.stats.v_time_s > 0
+    assert hi.stats.mean_ttft_v > lo.stats.mean_ttft_v
+    # deterministic: same workload, same virtual percentiles
+    again = drive(50_000.0)
+    assert again.ttft_v() == t_hi
+
+
+# ----------------------------------------- one clock code path (regression)
+
+def test_engine_stall_matches_simulator_replay(cfg, params):
+    """The acceptance criterion: engine-measured and simulator-predicted
+    stall time agree (bit-for-bit) on a fixed trace, for a hidden tier
+    (CXL) and an overshooting one (RDMA)."""
+    for pool, expect_stall in (("CXL", False), ("RDMA", True)):
+        eng = Engine(cfg, params=params, max_batch=2, max_len=32,
+                     prompt_bucket=8, pool=pool, emulate_step_s=5e-5)
+        for r in range(4):
+            eng.submit([5 + r, 17, 42], max_new=4)
+        stats = eng.run()
+        assert (stats.stall_s > 0) == expect_stall
+        pred = replay_stall_s(cfg.engram, pool, eng.scheduler.trace,
+                              layers=cfg.engram_layers(),
+                              n_layers=cfg.n_layers)
+        assert pred == stats.stall_s            # same code path: exact
+        assert stats.v_time_s > 0               # waves advanced the clock
+
+
+# ------------------------------------- single-sync pipelined speculation
+
+def test_host_block_keys_bit_identical(cfg):
+    """The host numpy twin packs the same segment keys as the jitted
+    device path — the precondition for skipping the spec wave's key pull."""
+    import jax.numpy as jnp
+    e = cfg.engram
+    rng = np.random.RandomState(0)
+    o = max(e.orders)
+    for trial in range(3):
+        stream = rng.randint(1, cfg.vocab_size, size=8 + trial).tolist()
+        block = rng.randint(1, cfg.vocab_size, size=4).tolist()
+        last = np.asarray([stream[-(o - 1):]], np.int32)
+        dev = np.asarray(block_engram_keys(
+            e, jnp.asarray(last), jnp.asarray([block], np.int32), 2))[0]
+        host = host_block_keys(e, stream, block, 2)
+        assert np.array_equal(dev.astype(np.int64), host)
+
+
+def test_pipeline_hit_spec_wave_is_single_sync(cfg, params):
+    """Satellite: with pipelined proposals at full acceptance, the spec
+    wave's packed-key pull is folded into the previous wave's prediction —
+    steady-state waves cost exactly ONE device->host sync (the fused
+    verdict) with token-identical output."""
+    prompts = [[5, 17, 42], [7, 8, 9, 10]]
+    ref_eng = Engine(cfg, params=params, max_batch=2, max_len=64,
+                     prompt_bucket=8, pool="CXL", emulate_step_s=5e-5)
+    rids = [ref_eng.submit(list(p), max_new=12) for p in prompts]
+    ref_eng.run()
+    ref = [ref_eng.done[r].out for r in rids]
+    streams = [p + o for p, o in zip(prompts, ref)]
+
+    def spec_run(pipeline):
+        eng = Engine(cfg, params=params, max_batch=2, max_len=64,
+                     prompt_bucket=8, pool="CXL", emulate_step_s=5e-5,
+                     spec=SpecConfig(max_draft=3, pipeline=pipeline),
+                     proposer=ScriptedProposer(streams))
+        rids = [eng.submit(list(p), max_new=12) for p in prompts]
+        rt = eng.runtime()
+        per_wave = []
+        while eng.busy:
+            before = eng.stats.d2h_pulls
+            rt.step()
+            per_wave.append(eng.stats.d2h_pulls - before)
+        return eng, [eng.done[r].out for r in rids], per_wave
+
+    eng0, out0, waves0 = spec_run(False)
+    eng1, out1, waves1 = spec_run(True)
+    assert out0 == ref and out1 == ref
+    # wave 0 admits (no prediction yet); every later wave is a pipeline
+    # hit and needs only the fused verdict pull
+    assert all(w == 2 for w in waves0[1:])      # keys + verdict
+    assert all(w == 1 for w in waves1[1:])      # verdict only
+    assert eng1.stats.pipelined_hits > 0
+    assert eng1.stats.pipelined_misses == 0
+    # the pipelined prefetch bookings were settled (refund-then-recharge)
+    assert eng1.clock.links["tier:CXL"].refunds > 0
+
+
+# ------------------------------------------------- cancel refunds + classes
+
+def test_cancel_during_spec_wave_refunds_clock(cfg, params):
+    """Satellite: mid-flight cancel with a pipelined speculative wave in
+    flight — the slot is freed, the queued prefetch's link booking is
+    refunded on the clock, and the survivor decodes token-identically
+    (the freed slot's KV is rolled back by the next admit's scatter)."""
+    prompts = [[5, 17, 42], [7, 8, 9, 10]]
+    solo = Engine(cfg, params=params, max_batch=2, max_len=64,
+                  prompt_bucket=8, pool="CXL", emulate_step_s=5e-5)
+    keep_rid = solo.submit(list(prompts[0]), max_new=12)
+    solo.run()
+    keep_ref = solo.done[keep_rid].out
+    streams = [prompts[0] + keep_ref, prompts[1] + [1] * 12]
+
+    eng = Engine(cfg, params=params, max_batch=2, max_len=64,
+                 prompt_bucket=8, pool="CXL", emulate_step_s=5e-5,
+                 spec=SpecConfig(max_draft=3, pipeline=True),
+                 proposer=ScriptedProposer(streams))
+    rt = eng.runtime()
+    keep = rt.submit(list(prompts[0]), max_new=12, klass="zipf")
+    victim = rt.submit(list(prompts[1]), max_new=12, klass="uniform")
+    rt.step()                                   # admit both
+    rt.step()                                   # one spec wave; pipelined
+    assert any(eng._pipelined.values())         # predictions in flight
+    refunded_before = eng.clock.refunded_bytes
+    assert rt.cancel(victim)
+    # slot freed + queued prefetch charge refunded on the clock
+    assert sum(s is not None for s in eng.slots) == 1
+    assert eng.clock.refunded_bytes > refunded_before
+    assert victim.cancelled
+    rt.drain()
+    assert keep.tokens == keep_ref              # survivor unaffected
+    # per-class speculation accounting flowed through the workload tags
+    by = eng.stats.spec_by_class
+    assert "zipf" in by and by["zipf"]["proposed"] > 0
+
+
+def test_spec_by_class_merge():
+    """EngineStats.merge aggregates the per-class speculation dicts
+    key-wise (the RouterStats.speculation by_class source)."""
+    from repro.serving import EngineStats
+    from repro.serving.router import RouterStats
+    a = EngineStats(spec_by_class={"zipf": {"proposed": 10, "accepted": 6}})
+    b = EngineStats(spec_by_class={"zipf": {"proposed": 2, "accepted": 1},
+                                   "uniform": {"proposed": 4,
+                                               "accepted": 1}})
+    agg = EngineStats()
+    agg.merge(a).merge(b)
+    assert agg.spec_by_class == {"zipf": {"proposed": 12, "accepted": 7},
+                                 "uniform": {"proposed": 4, "accepted": 1}}
+    spec = RouterStats(aggregate=agg, per_replica={}).speculation
+    assert spec["by_class"]["zipf"]["acceptance_rate"] == pytest.approx(
+        7 / 12)
+    assert spec["by_class"]["uniform"]["acceptance_rate"] == pytest.approx(
+        1 / 4)
+    # merging never aliases the source dicts
+    b.spec_by_class["uniform"]["proposed"] = 999
+    assert agg.spec_by_class["uniform"]["proposed"] == 4

@@ -170,3 +170,38 @@ def test_measured_scalability_rides_serve(cfg, params):
     assert [r["dp"] for r in rows] == [1, 2]
     assert all(r["tokens"] == 12 for r in rows)
     assert all(r["cache_hit_rate"] > 0.0 for r in rows)
+
+
+def test_redispatch_migrates_queued_requests(cfg, params):
+    """Continuous re-dispatch on the shared clock: when completion skew
+    develops mid-flight (one replica's requests are long, the other's
+    short), queued requests migrate off the backlogged replica — work the
+    submit-time least_loaded balance cannot do. Handles keep streaming
+    through their new runtime and every request completes."""
+    router = _router(cfg, params, policy="least_loaded", max_batch=1)
+    assert router.redispatch                     # default for least_loaded
+    # alternate long/short: least_loaded splits them 3/3 at submit, but
+    # the short replica drains fast while the long one keeps a backlog
+    lens = [12, 2, 12, 2, 12, 2]
+    handles = [router.submit([5 + i, 17, 42], max_new=n)
+               for i, n in enumerate(lens)]
+    router.drain()
+    rs = router.stats()
+    assert rs.migrations > 0
+    assert router.migrations == rs.migrations
+    assert all(h.finished for h in handles)
+    assert [len(h.tokens) for h in handles] == lens
+    # a migrated handle's runtime is its current owner (cancel/stream
+    # follow the request to the new replica)
+    assert rs.aggregate.requests_completed == len(handles)
+    # the fleet shares ONE timeline: every replica cursor is on it
+    assert set(rs.clock["cursors"]) >= {"replica0", "replica1"}
+
+
+def test_redispatch_off_for_affinity(cfg, params):
+    """cache_affinity keeps requests pinned (migration would defeat
+    proposer/KV warmth) unless explicitly enabled."""
+    router = _router(cfg, params, policy="cache_affinity")
+    assert not router.redispatch
+    forced = _router(cfg, params, policy="round_robin", redispatch=True)
+    assert forced.redispatch
