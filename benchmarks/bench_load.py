@@ -89,6 +89,12 @@ def _drive(cfg, *, pool, qps, requests, max_new, replicas=1,
         "tokens_per_vs": st.generated_tokens / max(st.v_time_s, 1e-12),
         "stall_ms": st.stall_s * 1e3,
         "link_wait_us": wait_s * 1e6,
+        # prefill accounting (bench_prefill.py optimizes these; here they
+        # contextualize the TTFT curves — pad compute and admission waves
+        # are part of what the offered load queues behind)
+        "pad_row_fraction": st.pad_row_fraction,
+        "prefill_waves_per_request": st.prefill_waves_per_request,
+        "prefix_hit_rate": st.prefix_hit_rate,
     }
 
 

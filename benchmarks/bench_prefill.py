@@ -1,0 +1,218 @@
+"""Chunked prefill + fleet prefix KV cache: admission smoothness + FLOPs.
+
+Two measured claims, both on the virtual clock (deterministic, no host
+timing noise), both with *bit-identical output tokens* to the un-chunked
+baseline — chunking and prefix reuse are pure schedule/compute
+optimisations, never accuracy trades:
+
+  * Scenario A (one replica, slot churn): a monolithic pow2-padded group
+    prefill stalls every running decode slot for the whole prompt pass;
+    chunked prefill interleaves fixed-size chunk waves with decode waves,
+    bounding the inter-token gap any admission can inject. Measured as
+    the p99 of the virtual inter-token gap distribution
+    (``ServeResult.intertoken_gaps_v``), plus the pad-row compute
+    fraction (group prefill pads every row to the group max bucketed
+    length; chunk waves only pad the final partial chunk).
+  * Scenario B (8-replica fleet, Zipf-skewed shared prefixes): with
+    private per-replica prefix caches every replica prefillls each hot
+    prefix from scratch; the fleet-wide cache prefillls it once and every
+    other replica restores the KV blocks over the pool link. Measured as
+    prefill compute tokens per request (FLOPs proxy: executed rows x
+    chunk, pad included) — the ISSUE's >= 2x reduction claim.
+
+Outputs
+-------
+  * ``prefill_sweep.csv`` + stdout rows — per-config gap percentiles,
+    pad fractions, prefill waves/request, prefix hit rates.
+  * ``BENCH_prefill.json`` — the sweep plus the pass/fail checks (the CI
+    ``prefill-smoke`` job uploads this artifact and fails the build on a
+    violated check):
+      - ``decode_gap_p99``: chunked p99 inter-token gap < monolithic
+        under admission churn (token streams identical);
+      - ``prefix_flops``: fleet-shared prefix cache cuts prefill compute
+        tokens/request by >= ``FLOPS_FACTOR`` vs private caches on the
+        Zipf shared-prefix workload (token streams identical);
+      - ``pad_fraction``: chunked pad-row compute fraction < monolithic
+        pow2 group prefill's.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+
+import numpy as np
+
+from repro.configs.base import StoreConfig
+from repro.launch.train import reduced_config
+from repro.serving import Workload, serve
+
+from .common import OUT_DIR, emit, write_csv
+
+EMULATED_STEP_S = 2e-4       # production decode cadence (Table 2/3 point)
+FLOPS_FACTOR = 2.0           # required prefill-compute reduction (ISSUE)
+
+
+def _tiny_cfg(cache_rows: int = 0):
+    cfg = reduced_config("deepseek-7b")
+    e = dataclasses.replace(cfg.engram, layers=(1,),
+                            store=StoreConfig(cache_rows=cache_rows))
+    return dataclasses.replace(cfg, n_layers=3, layer_types=("attn",) * 3,
+                               attn_kinds=("global",) * 3,
+                               ffn_types=("dense",) * 3, engram=e)
+
+
+def _pct(xs, q) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def _tokens(res) -> list:
+    return [h.tokens for h in res.handles]
+
+
+def _row(name, res) -> dict:
+    st = res.stats
+    gaps = res.intertoken_gaps_v()
+    return {
+        "config": name,
+        "requests": len(res.handles),
+        "gap_p50_us": _pct(gaps, 50) * 1e6,
+        "gap_p99_us": _pct(gaps, 99) * 1e6,
+        "gap_max_us": (max(gaps) if gaps else 0.0) * 1e6,
+        "prefill_waves": st.prefill_waves,
+        "waves_per_request": st.prefill_waves_per_request,
+        "prefill_tokens": st.prefill_tokens,
+        "pad_tokens": st.prefill_pad_tokens,
+        "pad_fraction": st.pad_row_fraction,
+        "compute_tokens": st.prefill_compute_tokens,
+        "compute_per_request": st.prefill_compute_tokens
+        / max(st.prefills, 1),
+        "restored_tokens": st.prefill_tokens_restored,
+        "prefix_hit_rate": st.prefix_hit_rate,
+        "v_time_s": st.v_time_s,
+    }
+
+
+def _scenario_a(cfg, *, requests: int, max_new: int) -> tuple:
+    """One replica, batch arrival, varied prompt lengths: requests >
+    max_batch, so later admissions land while earlier slots decode —
+    the regime where a monolithic group prefill spikes inter-token
+    gaps. ``prefix_pool=requests`` makes every prompt long and unique
+    (no reuse; scenario A isolates *scheduling*, not caching)."""
+    w = Workload(requests=requests, max_new=max_new, max_new_jitter=3,
+                 arrival="batch", prefix_pool=requests, prefix_len=48,
+                 seed=0)
+    common = dict(pool="CXL", max_batch=4, max_len=128, prompt_bucket=16,
+                  emulate_step_s=EMULATED_STEP_S, emu_prefill_scaled=True)
+    mono = serve(cfg, w, **common)
+    chunk = serve(cfg, w, prefill_chunk=16, **common)
+    return mono, chunk
+
+
+def _scenario_b(cfg, *, requests: int, max_new: int,
+                prefix_len: int) -> tuple:
+    """8-replica fleet, paced arrivals, 2 hot Zipf-skewed shared
+    prefixes with unique short tails: the fleet prefix cache's traffic
+    shape. The fleet cache pays one cold prefill per distinct prefix;
+    private caches pay one per (replica, prefix) combination the
+    round-robin dispatch produces. Shared vs private caches, plus the
+    un-chunked fleet as the token-equality reference."""
+    w = Workload(requests=requests, max_new=max_new, arrival="paced",
+                 arrival_every=4, prefix_pool=2, prefix_len=prefix_len,
+                 prefix_zipf_alpha=1.2, seed=1)
+    common = dict(pool="CXL", replicas=8, policy="round_robin",
+                  max_batch=4, max_len=prefix_len + 64,
+                  prompt_bucket=16, emulate_step_s=EMULATED_STEP_S,
+                  emu_prefill_scaled=True)
+    base = serve(cfg, w, **common)
+    chunked = dict(common, prefill_chunk=16,
+                   prefix_cache_bytes=256 << 20)
+    shared = serve(cfg, w, shared_prefix_cache=True, **chunked)
+    private = serve(cfg, w, shared_prefix_cache=False, **chunked)
+    return base, shared, private
+
+
+def run(fast: bool = False) -> dict:
+    cfg = _tiny_cfg()
+
+    # ---- A: admission smoothness + pad compute, single replica -------
+    req_a = 8 if fast else 12
+    mono, chunk = _scenario_a(cfg, requests=req_a,
+                              max_new=8 if fast else 12)
+    row_mono, row_chunk = _row("mono", mono), _row("chunked", chunk)
+    tokens_equal_a = _tokens(mono) == _tokens(chunk)
+    emit("prefill/mono", row_mono["gap_p99_us"],
+         f"gap_p50={row_mono['gap_p50_us']:.1f}us "
+         f"pad_frac={row_mono['pad_fraction']:.3f} "
+         f"waves/req={row_mono['waves_per_request']:.2f}")
+    emit("prefill/chunked", row_chunk["gap_p99_us"],
+         f"gap_p50={row_chunk['gap_p50_us']:.1f}us "
+         f"pad_frac={row_chunk['pad_fraction']:.3f} "
+         f"waves/req={row_chunk['waves_per_request']:.2f} "
+         f"tokens_equal={tokens_equal_a}")
+
+    # ---- B: fleet prefix cache, shared vs private --------------------
+    base, shared, private = _scenario_b(
+        cfg, requests=16 if fast else 32, max_new=4 if fast else 6,
+        prefix_len=160 if fast else 192)
+    row_base = _row("fleet_unchunked", base)
+    row_shared, row_private = _row("fleet_shared", shared), \
+        _row("fleet_private", private)
+    tokens_equal_b = (_tokens(base) == _tokens(shared)
+                      == _tokens(private))
+    flops_ratio = row_private["compute_per_request"] \
+        / max(row_shared["compute_per_request"], 1e-9)
+    pfx = shared.router.stats().prefix_cache
+    emit("prefill/fleet_shared", row_shared["compute_per_request"],
+         f"hit_rate={row_shared['prefix_hit_rate']:.3f} "
+         f"restored={row_shared['restored_tokens']} "
+         f"cache_entries={pfx.entries if pfx else 0}")
+    emit("prefill/fleet_private", row_private["compute_per_request"],
+         f"hit_rate={row_private['prefix_hit_rate']:.3f} "
+         f"restored={row_private['restored_tokens']} "
+         f"flops_ratio={flops_ratio:.2f} "
+         f"tokens_equal={tokens_equal_b}")
+
+    rows = [row_mono, row_chunk, row_base, row_shared, row_private]
+    write_csv("prefill_sweep",
+              list(rows[0].keys()), [list(r.values()) for r in rows])
+
+    checks = {
+        # chunked prefill bounds the gap any admission injects into
+        # running decodes; output tokens must not move
+        "decode_gap_p99": bool(
+            tokens_equal_a
+            and row_chunk["gap_p99_us"] < row_mono["gap_p99_us"]),
+        # the fleet cache prefillls each hot prefix once; private caches
+        # once per replica — >= FLOPS_FACTOR fewer executed prefill
+        # tokens per request, identical output tokens
+        "prefix_flops": bool(tokens_equal_b
+                             and flops_ratio >= FLOPS_FACTOR),
+        # chunk waves only pad the last partial chunk (plus pow2 rows);
+        # group prefill pads every row to the group max bucketed length
+        "pad_fraction": bool(
+            row_chunk["pad_fraction"] < row_mono["pad_fraction"]),
+    }
+    out = {
+        "emulate_step_s": EMULATED_STEP_S,
+        "flops_factor": FLOPS_FACTOR,
+        "rows": rows,
+        "tokens_equal": {"scenario_a": tokens_equal_a,
+                         "scenario_b": tokens_equal_b},
+        "flops_ratio": flops_ratio,
+        "checks": checks,
+    }
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    with open(OUT_DIR / "BENCH_prefill.json", "w") as f:
+        json.dump(out, f, indent=2)
+    for name, ok in checks.items():
+        emit(f"prefill/check/{name}", 0.0 if ok else 1.0,
+             "PASS" if ok else "FAIL")
+    if not all(checks.values()):
+        raise SystemExit(f"bench_prefill checks failed: "
+                         f"{[k for k, v in checks.items() if not v]}")
+    return out
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

@@ -6,6 +6,8 @@ mix maps the n-gram window to a row of that head's table.
 """
 from __future__ import annotations
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -210,6 +212,31 @@ def host_block_keys(ecfg: EngramConfig, stream, block,
            + np.arange(T, dtype=np.int64)[None, :])             # (L, T)
     return (idx.astype(np.int64)[:, None, :]
             + tid[None, :, :] * ecfg.table_vocab)               # (m, L, T)
+
+
+def prefix_chain_keys(tokens, block_tokens: int) -> list:
+    """Chained block keys over a prompt's whole ``block_tokens``-sized
+    prefix blocks: key ``i`` identifies the ENTIRE token prefix through
+    block ``i`` (each block's digest is chained through its predecessor's),
+    so two prompts share key ``i`` iff their first ``(i+1)*block_tokens``
+    tokens are identical — the prefix-KV-cache's identity.
+
+    crc32-chained (two independently seeded streams folded into one 64-bit
+    key): bit-identical across replicas and processes, unlike Python's
+    ``hash()`` which PYTHONHASHSEED salts per process. The trailing partial
+    block gets no key — prefix reuse is block-granular by construction
+    (a chunk-prefill boundary is the only state a snapshot can restore)."""
+    assert block_tokens > 0, block_tokens
+    toks = [int(t) for t in tokens]
+    h1, h2 = 0, 0x9E3779B9
+    out = []
+    for b in range(len(toks) // block_tokens):
+        data = np.asarray(toks[b * block_tokens:(b + 1) * block_tokens],
+                          np.int64).tobytes()
+        h1 = zlib.crc32(data, h1)
+        h2 = zlib.crc32(data, h2)
+        out.append((h1 << 32) | h2)
+    return out
 
 
 def update_last_tokens(last_tokens: jax.Array, new_token: jax.Array) -> jax.Array:

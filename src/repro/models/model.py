@@ -328,6 +328,40 @@ def build_multitoken_decode(cfg: ModelConfig, flags: RunFlags,
     return lambda params, state, block: multitoken_step(params, state, block)
 
 
+def build_chunk_prefill(cfg: ModelConfig, flags: RunFlags):
+    """Chunked-prefill step for ragged admission.
+
+    (params, state, chunk (B,C), lens (B,)) -> (logits (B,V), new_state)
+
+    Unrolls C single-token decode steps (C static at trace time) over a
+    fixed-size chunk of each row's prompt, starting from an arbitrary
+    per-row prefill offset carried in ``state['positions']`` — the decode
+    path is the one machine that advances EVERY cache type (attention KV,
+    MLA latents, SSM/conv, xLSTM cells) one position at a time, so a chunk
+    is just a gated run of it. Rows whose chunk is shorter than C
+    (``lens``) stop advancing at their length (``serving.slots.gate_state``);
+    the returned logits are each row's LAST VALID step's logits — for the
+    final chunk of a prompt that is exactly the prefill logits the first
+    sampled token comes from.
+    """
+    assert not cfg.is_encoder
+    from ..serving.slots import gate_state
+
+    def chunk_step(params, state, chunk, lens):
+        C = chunk.shape[1]
+        logits_keep = None
+        st = state
+        for s in range(C):
+            valid = lens > s
+            logits, new_st = _decode_one(cfg, flags, params, st, chunk[:, s])
+            st = gate_state(valid, new_st, st)
+            logits_keep = logits if logits_keep is None else \
+                jnp.where(valid[:, None], logits, logits_keep)
+        return logits_keep, st
+
+    return chunk_step
+
+
 def build_encoder_step(cfg: ModelConfig, flags: RunFlags):
     """Encoder forward: (params, batch) -> logits (B,S,V)."""
     def encoder_step(params, batch):

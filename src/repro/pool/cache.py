@@ -275,6 +275,164 @@ class SharedCache:
                       for n, v in self.views.items()})
 
 
+# ---------------------------------------------------------------------------
+# fleet-wide prefix KV cache (chunked prefill's reuse layer)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PrefixCacheStats:
+    """Block-granular accounting for a ``PrefixKVCache``."""
+    capacity_bytes: int
+    bytes: int
+    entries: int
+    lookups: int
+    hit_blocks: int
+    lookup_blocks: int
+    inserts: int
+    evictions: int
+    restored_tokens: int
+    per_view: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.lookup_blocks
+        return self.hit_blocks / n if n else 0.0
+
+
+class PrefixKVCache:
+    """LRU over prefill-state snapshots keyed by chained prefix-block
+    hashes (``core.hashing.prefix_chain_keys``).
+
+    The paper's pooled-tier argument extends from Engram rows to shared KV
+    prefix blocks: N replicas on Zipf traffic re-prefill the same hot
+    prefixes from scratch unless the pool holds the prefill state they
+    already computed. An entry is one ``serving.slots.extract_prefix``
+    snapshot — a whole slot state at a chunk boundary (KV sliced to the
+    prefix length, recurrent leaves, positions, last_tokens) — so a hit
+    restores ``n_blocks * block_tokens`` prompt tokens as ONE tier fetch
+    instead of a prefill pass.
+
+    ``lookup(chain)`` walks the request's block-chain keys deepest-first
+    and returns the deepest snapshot present (chain keys encode the whole
+    prefix, so any present key is a usable restart point). Byte-budget
+    LRU: inserts evict least-recently-used snapshots past
+    ``capacity_bytes``. ``view(name)`` hands a replica its own stats
+    window onto the one shared structure (the ``SharedCache`` pattern);
+    a private fleet just builds one ``PrefixKVCache`` per replica.
+    """
+
+    def __init__(self, capacity_bytes: int, block_tokens: int):
+        assert capacity_bytes > 0 and block_tokens > 0
+        self.capacity_bytes = int(capacity_bytes)
+        self.block_tokens = int(block_tokens)
+        # key -> (snapshot, n_tokens, nbytes)
+        self._entries: OrderedDict[int, tuple] = OrderedDict()
+        self.bytes = 0
+        self.lookups = 0
+        self.hit_blocks = 0
+        self.lookup_blocks = 0
+        self.inserts = 0
+        self.evictions = 0
+        self.restored_tokens = 0
+        self.views: dict = {}
+
+    def __contains__(self, key: int) -> bool:
+        return int(key) in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, chain) -> tuple:
+        """Deepest present snapshot for a request's block-chain keys ->
+        ``(n_blocks_hit, snapshot, nbytes)`` (``(0, None, 0)`` on miss)."""
+        self.lookups += 1
+        self.lookup_blocks += len(chain)
+        for i in range(len(chain) - 1, -1, -1):
+            ent = self._entries.get(int(chain[i]))
+            if ent is not None:
+                self._entries.move_to_end(int(chain[i]))
+                snap, n_tokens, nbytes = ent
+                self.hit_blocks += i + 1
+                self.restored_tokens += n_tokens
+                return i + 1, snap, nbytes
+        return 0, None, 0
+
+    def insert(self, key: int, snapshot, n_tokens: int, nbytes: int) -> bool:
+        """Spill one chunk-boundary snapshot; evicts LRU entries past the
+        byte budget. Oversized snapshots (bigger than the whole budget)
+        are rejected rather than flushing the cache."""
+        key = int(key)
+        if key in self._entries or nbytes > self.capacity_bytes:
+            return False
+        self._entries[key] = (snapshot, int(n_tokens), int(nbytes))
+        self.bytes += int(nbytes)
+        self.inserts += 1
+        while self.bytes > self.capacity_bytes:
+            _, (_, _, nb) = self._entries.popitem(last=False)
+            self.bytes -= nb
+            self.evictions += 1
+        return True
+
+    def view(self, name) -> "_PrefixCacheView":
+        assert name not in self.views, f"duplicate prefix view {name!r}"
+        v = _PrefixCacheView(self, name)
+        self.views[name] = v
+        return v
+
+    def stats(self) -> PrefixCacheStats:
+        return PrefixCacheStats(
+            capacity_bytes=self.capacity_bytes, bytes=self.bytes,
+            entries=len(self._entries), lookups=self.lookups,
+            hit_blocks=self.hit_blocks, lookup_blocks=self.lookup_blocks,
+            inserts=self.inserts, evictions=self.evictions,
+            restored_tokens=self.restored_tokens,
+            per_view={n: {"hit_blocks": v.hit_blocks,
+                          "lookup_blocks": v.lookup_blocks,
+                          "inserts": v.inserts, "hit_rate": v.hit_rate}
+                      for n, v in self.views.items()})
+
+
+class _PrefixCacheView:
+    """One replica's handle onto a shared ``PrefixKVCache``: forwards
+    lookups/inserts (any replica's prefill warms prefixes for all of
+    them) while keeping per-replica hit accounting. Duck-types the cache
+    for the engine (``lookup`` / ``insert`` / ``block_tokens`` /
+    ``__contains__``)."""
+
+    def __init__(self, shared: PrefixKVCache, name):
+        self.shared = shared
+        self.name = name
+        self.hit_blocks = 0
+        self.lookup_blocks = 0
+        self.inserts = 0
+
+    @property
+    def block_tokens(self) -> int:
+        return self.shared.block_tokens
+
+    def __contains__(self, key: int) -> bool:
+        return key in self.shared
+
+    def lookup(self, chain) -> tuple:
+        n, snap, nbytes = self.shared.lookup(chain)
+        self.lookup_blocks += len(chain)
+        self.hit_blocks += n
+        return n, snap, nbytes
+
+    def insert(self, key: int, snapshot, n_tokens: int, nbytes: int) -> bool:
+        ok = self.shared.insert(key, snapshot, n_tokens, nbytes)
+        self.inserts += int(ok)
+        return ok
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.lookup_blocks
+        return self.hit_blocks / n if n else 0.0
+
+    def stats(self) -> PrefixCacheStats:
+        return self.shared.stats()
+
+
 def zipf_keys(n: int, vocab: int, *, alpha: float = 1.2,
               seed: int = 0) -> np.ndarray:
     """Zipf-distributed key stream over [0, vocab) — the paper's reuse

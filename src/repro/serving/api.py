@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Union
 
+from ..pool.cache import PrefixKVCache
 from .engine import EngineStats
 from .router import Router
 from .runtime import EngramRuntime
@@ -56,6 +57,17 @@ class ServeResult:
         return [h.request.done_v - h.request.submitted_v
                 for h in self.handles if h.finished]
 
+    def intertoken_gaps_v(self) -> list:
+        """Per-request virtual inter-token gaps (consecutive emission-
+        stamp diffs), concatenated over all requests — the decode-
+        smoothness distribution whose p99 a monolithic group prefill
+        inflates and chunked prefill bounds."""
+        gaps = []
+        for h in self.handles:
+            st = h.request.stamps
+            gaps.extend(b - a for a, b in zip(st, st[1:]))
+        return gaps
+
 
 def _engines(frontend) -> list:
     if isinstance(frontend, Router):
@@ -76,13 +88,29 @@ def serve(cfg, workload: Workload, *, pool=None, replicas: int = 1,
     `poisson` offered load (an idle fleet fast-forwards to the next
     arrival; a busy one meets it mid-flight) — interleaved with
     `step()`s, then the fleet is drained.
+
+    ``prefix_cache_bytes`` / ``shared_prefix_cache`` (engine_kwargs,
+    intercepted here): mount a prefix KV cache over chunk-boundary
+    prefill snapshots — one fleet-wide cache by default, private
+    per-replica caches with ``shared_prefix_cache=False``; a single
+    replica always gets its own. Needs ``prefill_chunk``.
     """
     specs = workload.build(cfg.vocab_size)
+    prefix_cache_bytes = int(engine_kwargs.pop("prefix_cache_bytes", 0))
+    shared_prefix_cache = bool(engine_kwargs.pop("shared_prefix_cache",
+                                                 True))
     if replicas > 1:
         frontend: Union[EngramRuntime, Router] = Router(
             cfg, replicas=replicas, pool=pool, policy=policy,
-            shared_cache=shared_cache, **engine_kwargs)
+            shared_cache=shared_cache,
+            prefix_cache_bytes=prefix_cache_bytes,
+            shared_prefix_cache=shared_prefix_cache, **engine_kwargs)
     else:
+        if prefix_cache_bytes > 0:
+            chunk = engine_kwargs.get("prefill_chunk")
+            assert chunk, "prefix_cache_bytes needs prefill_chunk"
+            engine_kwargs["prefix_cache"] = PrefixKVCache(
+                prefix_cache_bytes, chunk)
         frontend = EngramRuntime(cfg, pool=pool, **engine_kwargs)
     if warmup:
         for eng in _engines(frontend):

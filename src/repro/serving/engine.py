@@ -90,15 +90,17 @@ from ..core.engram import retrieve
 from ..core.hashing import (block_engram_indices, block_engram_keys,
                             decode_engram_indices, decode_engram_keys,
                             engram_indices, host_block_keys,
-                            pack_segment_keys)
-from ..models.model import (build_decode_step, build_prefill_step,
-                            init_decode_state, init_params)
+                            pack_segment_keys, prefix_chain_keys)
+from ..models.model import (build_chunk_prefill, build_decode_step,
+                            build_prefill_step, init_decode_state,
+                            init_params)
 from ..models.transformer import RunFlags
 from ..pool.scheduler import PrefetchScheduler
 from ..pool.store import TableFetcher, make_store
 from ..pool.tiers import TIERS
 from .clock import VirtualClock
-from .slots import update_slots
+from .slots import (extract_prefix, gate_state, restore_prefix,
+                    select_slots, update_slots)
 
 
 @dataclasses.dataclass
@@ -117,6 +119,32 @@ class Request:
     submitted_v: float = 0.0
     first_token_v: float = 0.0
     done_v: float = 0.0
+    # per-emitted-token virtual stamps (appended by the runtime, one per
+    # token in ``out`` order): consecutive diffs are the request's
+    # inter-token gaps — the decode-smoothness observable bench_prefill's
+    # admission-stall claim is asserted on
+    stamps: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """One request's chunked-prefill progress: a slot is held from
+    admission, and each chunk wave advances ``pos`` by up to
+    ``prefill_chunk`` prompt tokens until the prompt is fully in KV and
+    the slot goes live. ``restore`` is a pending prefix-cache snapshot
+    (consumed lazily at the job's first chunk wave); ``resv`` holds the
+    queued clock-link bookings (prefix fetch, next-chunk engram prefetch)
+    outstanding between waves — refunded LIFO at the next wave or on
+    mid-prefill ``cancel()``."""
+    req: Request
+    slot: int
+    pos: int = 0                     # prompt tokens already in the KV cache
+    restore: object = None           # pending prefix snapshot (host tree)
+    restore_tokens: int = 0          # tokens the snapshot carries
+    restore_bytes: int = 0           # snapshot bytes (the tier-fetch charge)
+    chain: list = dataclasses.field(default_factory=list)  # block chain keys
+    resv: list = dataclasses.field(default_factory=list)   # queued bookings
+    started: bool = False
 
 
 def _rate(num: float, den: float) -> float:
@@ -153,6 +181,13 @@ class EngineStats:
     spec_by_class: dict = dataclasses.field(default_factory=dict)
     # --- hot path ---------------------------------------------------------
     d2h_pulls: int = 0               # device->host syncs through _host()
+    # --- prefill path (chunked prefill + prefix cache) --------------------
+    prefill_waves: int = 0           # admission-group / chunk compute waves
+    prefill_tokens: int = 0          # useful prompt tokens actually computed
+    prefill_pad_tokens: int = 0      # executed pad positions (rows + steps)
+    prefill_tokens_restored: int = 0 # prompt tokens restored from the cache
+    prefix_lookup_blocks: int = 0    # whole prompt blocks eligible for reuse
+    prefix_hit_blocks: int = 0       # blocks served by the prefix cache
 
     @property
     def tokens_per_s(self) -> float:
@@ -177,6 +212,31 @@ class EngineStats:
     @property
     def tokens_per_step(self) -> float:
         return _rate(self.generated_tokens, self.decode_steps)
+
+    @property
+    def pad_row_fraction(self) -> float:
+        """Fraction of executed prefill token-positions that were padding
+        (pow2 group rows + right-pad / chunk-tail steps) — the compute the
+        monolithic pow2 group prefill burns and chunking reclaims."""
+        return _rate(self.prefill_pad_tokens,
+                     self.prefill_pad_tokens + self.prefill_tokens)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Block-granular prefix-cache hit rate over admitted prompts."""
+        return _rate(self.prefix_hit_blocks, self.prefix_lookup_blocks)
+
+    @property
+    def prefill_waves_per_request(self) -> float:
+        return _rate(self.prefill_waves, self.prefills)
+
+    @property
+    def prefill_compute_tokens(self) -> float:
+        """Executed prefill token-positions (useful + pad): the
+        prefill-FLOPs proxy ``bench_prefill`` sweeps — restored prefix
+        tokens cost a tier fetch, not a forward pass, so they are absent.
+        Float like every stats property (division-safe contract)."""
+        return float(self.prefill_tokens + self.prefill_pad_tokens)
 
     @property
     def requests_per_s(self) -> float:
@@ -227,11 +287,34 @@ class Engine:
                  emulate_step_s: Optional[float] = None,
                  spec: Optional[SpecConfig] = None, proposer=None,
                  store=None, name: Optional[str] = None,
-                 rid_start: int = 0, clock: Optional[VirtualClock] = None):
+                 rid_start: int = 0, clock: Optional[VirtualClock] = None,
+                 prefill_chunk: Optional[int] = None, prefix_cache=None,
+                 emu_prefill_scaled: bool = False):
         """``emulate_step_s``: evaluate the pool stalls at a production
         operating point (ms-scale decode steps) instead of this host's
         CPU step times — stalls are then accounted in ``emu_time_s``
         rather than slept (Table 2/3 emulation).
+
+        ``prefill_chunk``: admission runs CHUNKED — a queued request takes
+        a slot immediately but its prompt enters the KV cache
+        ``prefill_chunk`` tokens per ``_chunk_wave``, interleaved with the
+        running slots' decode waves, so a long prompt never head-of-line-
+        blocks in-flight decodes with one monolithic pow2-padded group
+        prefill. None (default) keeps the legacy monolithic admission.
+
+        ``prefix_cache``: a ``pool.cache.PrefixKVCache`` (or a fleet
+        view): prompt prefix blocks are chain-hashed
+        (``core.hashing.prefix_chain_keys``, block size = the chunk) and
+        completed chunk-boundary states are spilled / restored through it,
+        charged on the pool's clock link as byte transfers — a prefix hit
+        costs a tier fetch, not a prefill pass. Requires ``prefill_chunk``
+        (snapshots only exist at chunk boundaries).
+
+        ``emu_prefill_scaled``: at the emulated operating point, charge a
+        prefill wave ``emulate_step_s * executed_tokens / max_batch``
+        (compute-proportional) instead of the legacy flat one-step cost —
+        the model under which chunking's bounded per-wave work is visible
+        in decode-wave inter-token gaps.
 
         ``spec``: run in speculate mode (overrides ``cfg.spec``);
         ``proposer``: inject a custom draft proposer (tests/benches);
@@ -309,10 +392,46 @@ class Engine:
         self._prefill_fn = build_prefill_step(cfg, flags, max_len=max_len)
         self._prefill = jax.jit(self._prefill_fn)
         self._admit_wave = jax.jit(self._admit_wave_fn)
-        self._decode = jax.jit(build_decode_step(cfg, flags))
-        ext = build_decode_step(cfg, flags, external_rows=True) \
+        # chunked-prefill admission (None = legacy monolithic groups)
+        self.prefill_chunk = int(prefill_chunk) if prefill_chunk else None
+        self.prefix_cache = prefix_cache
+        self.emu_prefill_scaled = bool(emu_prefill_scaled)
+        self._prefill_jobs: dict[int, _PrefillJob] = {}
+        self._chunk_wave_jit = None
+        if self.prefix_cache is not None:
+            assert self.prefill_chunk is not None, \
+                "prefix_cache needs prefill_chunk (snapshots live at " \
+                "chunk boundaries)"
+            assert self.prefix_cache.block_tokens == self.prefill_chunk, \
+                (self.prefix_cache.block_tokens, self.prefill_chunk)
+        if self.prefill_chunk is not None:
+            self._chunk_core = build_chunk_prefill(cfg, flags)
+            self._chunk_wave_jit = jax.jit(self._chunk_wave_fn)
+            # fresh-slot template: zeroed batch-1 state scattered over a
+            # freed slot before its first chunk (positions/last_tokens of
+            # the previous occupant must not leak into the new prompt)
+            self._state1 = init_decode_state(cfg, flags, 1, max_len)
+        self._decode_fn = build_decode_step(cfg, flags)
+        self._decode = jax.jit(self._decode_fn)
+        self._decode_ext_fn = build_decode_step(cfg, flags,
+                                                external_rows=True) \
             if self.has_engram else None
-        self._decode_ext = jax.jit(ext) if ext else None
+        self._decode_ext = jax.jit(self._decode_ext_fn) \
+            if self._decode_ext_fn else None
+        # chunked mode: while prefill jobs are in flight, decode waves run
+        # GATED (serving/slots.gate_state) — a mid-prefill slot's
+        # positions/last_tokens must not advance under it between chunk
+        # waves (the decode wave's garbage KV write at the un-advanced
+        # position is overwritten by the job's next real write there)
+        self._decode_gated = None
+        self._decode_ext_gated = None
+        if self.prefill_chunk is not None:
+            assert self.spec is None, \
+                "chunked prefill does not compose with speculative " \
+                "decoding (the verify pass is ungated)"
+            self._decode_gated = jax.jit(self._decode_gated_fn)
+            if self._decode_ext_fn is not None:
+                self._decode_ext_gated = jax.jit(self._decode_ext_gated_fn)
         self._prefetch = jax.jit(self._prefetch_fn) if self.has_engram else None
         self._insert = jax.jit(update_slots, static_argnames=())
 
@@ -384,7 +503,8 @@ class Engine:
     @property
     def busy(self) -> bool:
         """Anything queued or mid-flight?"""
-        return bool(self.queue) or any(s is not None for s in self.slots)
+        return (bool(self.queue) or bool(self._prefill_jobs)
+                or any(s is not None for s in self.slots))
 
     def runtime(self) -> "EngramRuntime":
         """The engine's request-lifecycle front-end (serving/runtime.py):
@@ -413,6 +533,16 @@ class Engine:
                 self.queue.remove(req)
                 self._mark_cancelled(req)
                 return True
+        for job in list(self._prefill_jobs.values()):
+            if job.req.rid == rid:
+                # mid-prefill cancel: free the slot and refund the queued
+                # bookings. The partially-restored / partially-prefilled
+                # KV needs no surgery — slot state is only read for live
+                # slots, and the next job's _start_job scatter-writes a
+                # fresh (or restored) batch-1 state over it.
+                self._drop_job(job)
+                self._mark_cancelled(job.req)
+                return True
         for slot, req in enumerate(self.slots):
             if req is not None and req.rid == rid:
                 self.slots[slot] = None
@@ -431,6 +561,18 @@ class Engine:
         pipe = self._pipelined.pop(slot, None)
         if pipe is not None and pipe[4] is not None:
             self.clock.refund(pipe[4])
+
+    def _drop_job(self, job: _PrefillJob) -> None:
+        """Retire a chunked-prefill job: refund its outstanding clock-link
+        bookings NEWEST-FIRST (``Link.refund`` only rolls back the tail,
+        and the job booked in issue order, so LIFO unwinds the whole run —
+        the PR 5 invariant ``_propose_block`` documents) and release the
+        slot."""
+        for tr in job.resv[::-1]:
+            self.clock.refund(tr)
+        job.resv.clear()
+        self._prefill_jobs.pop(job.slot, None)
+        self._free.append(job.slot)
 
     def _mark_cancelled(self, req: Request) -> None:
         req.status = "cancelled"
@@ -500,6 +642,8 @@ class Engine:
 
         Wave primitive: returns ``(request, emitted_tokens, finished)``
         tuples — the runtime turns them into ``TokenEvent`` streams."""
+        if self.prefill_chunk is not None:
+            return self._admit_chunked()
         events = []
         if not (self._free and self.queue):
             return events
@@ -527,9 +671,19 @@ class Engine:
             for r, (_, req) in enumerate(group):
                 buf[r, :len(req.prompt)] = req.prompt
                 lens[r] = len(req.prompt)
+            # prefill compute accounting: the group executes every one of
+            # its n_pad x S token-positions — right-pad and pow2 pad rows
+            # included — which is exactly the waste chunking reclaims
+            useful = int(lens[:n].sum())
+            self.stats.prefill_waves += 1
+            self.stats.prefill_tokens += useful
+            self.stats.prefill_pad_tokens += n_pad * S - useful
+            emu_s = None
             if self.emulate_step_s is not None:
-                # one bucketed multi-slot prefill ~ one batched step
-                self.stats.emu_time_s += self.emulate_step_s
+                # one bucketed multi-slot prefill: flat one batched step,
+                # or compute-proportional under emu_prefill_scaled
+                emu_s = self._prefill_step_s(n_pad * S)
+                self.stats.emu_time_s += emu_s
             slots_j = jnp.asarray([s for s, _ in group]
                                   + [self.max_batch] * (n_pad - n),
                                   jnp.int32)
@@ -547,9 +701,7 @@ class Engine:
                         charge[j].append(live[:, j, :].reshape(-1))
             t_now = time.perf_counter()
             # the group's prefill is one batched step on the timeline
-            self.cursor.advance(self.emulate_step_s
-                                if self.emulate_step_s is not None
-                                else t_now - t_g)
+            self.cursor.advance(emu_s if emu_s is not None else t_now - t_g)
             for r, (slot, req) in enumerate(group):
                 tok = int(toks[r])
                 req.out.append(tok)
@@ -578,6 +730,223 @@ class Engine:
             if finished:
                 req.done_v = t_v
         self._next_keys = None      # decode keys were computed pre-admit
+        return events
+
+    # ------------------------------------------------- chunked prefill path
+
+    def _admit_chunked(self) -> list:
+        """Chunked admission: a queued request claims a free slot
+        immediately as a ``_PrefillJob`` — no compute happens here. Its
+        prompt enters the KV cache ``prefill_chunk`` tokens per
+        ``_chunk_wave`` (the runtime interleaves one chunk wave with each
+        decode wave), so a long prompt never head-of-line-blocks the
+        running slots behind a monolithic pow2-padded group prefill.
+
+        With a prefix cache, the prompt's chained block keys are looked up
+        here and the deepest cached boundary state is scheduled for
+        restore; the hit's bytes are booked on the pool's clock link now —
+        a prefix hit costs a tier fetch, not a prefill pass. The booking
+        stays outstanding (refundable) until the job's first chunk wave,
+        so a mid-prefill ``cancel()`` returns the bandwidth.
+
+        Wave primitive: returns no events — a job's first token is
+        emitted by the chunk wave that finishes its prompt."""
+        C = self.prefill_chunk
+        while self._free and self.queue:
+            req = self.queue.popleft()
+            slot = self._free.popleft()
+            job = _PrefillJob(req=req, slot=slot)
+            if self.prefix_cache is not None:
+                job.chain = prefix_chain_keys(req.prompt, C)
+                # restorable depth is capped so >= 1 prompt token remains
+                # to compute: snapshots carry KV state, not the logits
+                # that sample the request's first token
+                usable = job.chain[:(len(req.prompt) - 1) // C]
+                self.stats.prefix_lookup_blocks += len(usable)
+                if usable:
+                    n_hit, snap, nbytes = self.prefix_cache.lookup(usable)
+                    if n_hit:
+                        job.restore = snap
+                        job.restore_tokens = n_hit * C
+                        job.restore_bytes = int(nbytes)
+                        job.pos = n_hit * C
+                        self.stats.prefix_hit_blocks += n_hit
+                        self.stats.prefill_tokens_restored += n_hit * C
+                        tr = self._reserve_bytes(nbytes)
+                        if tr is not None:
+                            job.resv.append(tr)
+            req.status = "running"
+            self._prefill_jobs[slot] = job
+        return []
+
+    def _start_job(self, job: _PrefillJob) -> None:
+        """Lazy first-wave start: scatter a fresh batch-1 state — or the
+        prefix-cache restore, KV padded back to decode capacity — over the
+        job's slot. Deferred from admission so the prefix-fetch booking is
+        outstanding (and refundable) until the job actually computes."""
+        if job.restore is not None:
+            sub = restore_prefix(job.restore, self.max_len)
+            job.restore = None
+        else:
+            sub = self._state1
+        self.state = self._insert(self.state, sub,
+                                  jnp.asarray([job.slot], jnp.int32))
+        job.started = True
+
+    def _chunk_wave_fn(self, params, state, tokens, chunk, lens, slots):
+        """One fused chunk-prefill wave over the active jobs: gather the
+        job slots' sub-state, unroll ``prefill_chunk`` gated decode steps
+        over the ragged chunk, scatter back, and sample each row's last
+        valid logits. Returns the new state plus ONE packed int64 vector
+        [sampled tokens | the chunk's packed engram keys] (pool mode) —
+        the wave's single host pull. Pad rows (pow2 group) gather a
+        clamped slot, run fully masked, and scatter out of bounds (the
+        write is dropped)."""
+        sub = select_slots(state, slots)
+        pk = None
+        if self._pool_mode:
+            e = self.cfg.engram
+            kidx = block_engram_indices(e, sub["last_tokens"], chunk)
+            pk = pack_segment_keys(e, kidx, self._n_eng)   # (n, C, L, T)
+        logits, new_sub = self._chunk_core(params, sub, chunk, lens)
+        state = update_slots(state, new_sub, slots)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tokens = tokens.at[slots].set(tok)
+        packed = tok
+        if pk is not None:
+            packed = jnp.concatenate([tok.astype(pk.dtype), pk.reshape(-1)])
+        return state, tokens, packed
+
+    def _chunk_wave(self) -> list:
+        """Advance every in-flight prefill job by one chunk — a bounded
+        compute wave interleaved between decode waves, with ONE host pull.
+        Jobs that consume their last prompt token emit their first sampled
+        token and go live as decode slots.
+
+        Completed chunk boundaries are spilled into the prefix cache
+        (host snapshot + byte-charged pool-link write), so concurrent and
+        future requests sharing the prefix skip the work fleet-wide.
+
+        Wave primitive: returns ``(request, emitted_tokens, finished)``
+        tuples for the jobs whose prompt completed."""
+        if not self._prefill_jobs:
+            return []
+        jobs = [self._prefill_jobs[s] for s in sorted(self._prefill_jobs)]
+        C = self.prefill_chunk
+        t0 = time.perf_counter()
+        self.cursor.next_wave()
+        # settle the inter-wave bookings NEWEST-FIRST: Link.refund only
+        # rolls back the tail, and the bookings were issued in job order,
+        # so LIFO unwinds the whole run (the _propose_block doctrine) —
+        # the wave re-charges through the normal path below
+        for job in jobs[::-1]:
+            for tr in job.resv[::-1]:
+                self.clock.refund(tr)
+            job.resv.clear()
+        for job in jobs:
+            if not job.started:
+                if job.restore is not None and job.restore_bytes:
+                    # the prefix hit's tier fetch, re-priced at this
+                    # wave's timeline position; the snapshot must be on
+                    # device before the chunk computes, so the transfer's
+                    # completion is a charged stall
+                    tr = self._reserve_bytes(job.restore_bytes)
+                    if tr is not None and tr.end_s > self.cursor.now_s:
+                        stall = tr.end_s - self.cursor.now_s
+                        self.stats.stall_s += stall
+                        self.stats.emu_time_s += stall
+                        self.cursor.advance(stall)
+                self._start_job(job)
+        n = len(jobs)
+        # pow2 row padding: O(log max_batch) unroll traces, not one per
+        # job count (same admission-trace argument as the legacy groups)
+        n_pad = 1 << (n - 1).bit_length()
+        buf = self._prompt_view(n_pad, C)
+        lens = np.zeros((n_pad,), np.int32)
+        for r, job in enumerate(jobs):
+            take = min(C, len(job.req.prompt) - job.pos)
+            buf[r, :take] = job.req.prompt[job.pos:job.pos + take]
+            lens[r] = take
+        slots_j = jnp.asarray([j.slot for j in jobs]
+                              + [self.max_batch] * (n_pad - n), jnp.int32)
+        self.state, self.tokens, packed = self._chunk_wave_jit(
+            self.params, self.state, self.tokens, jnp.asarray(buf),
+            jnp.asarray(lens), slots_j)
+        packed = self._host(packed)            # ONE pull per chunk wave
+        toks = packed[:n_pad]
+        # prefill compute accounting: the unroll executes n_pad x C
+        # token-positions; pad = pow2 rows + each job's ragged tail steps
+        useful = int(lens[:n].sum())
+        self.stats.prefill_waves += 1
+        self.stats.prefill_tokens += useful
+        self.stats.prefill_pad_tokens += n_pad * C - useful
+        emu_s = None
+        if self.emulate_step_s is not None:
+            emu_s = self._prefill_step_s(n_pad * C)
+            self.stats.emu_time_s += emu_s
+        if self._pool_mode:
+            pk = packed[n_pad:].reshape(n_pad, C, self._n_eng, -1)
+            charge = [[] for _ in range(self._n_eng)]
+            for r in range(n):
+                live = pk[r, :lens[r]]         # drop ragged-tail positions
+                for j in range(self._n_eng):
+                    charge[j].append(live[:, j, :].reshape(-1))
+            self._charge_wave([np.concatenate(c) for c in charge],
+                              step_s=emu_s)
+        t_now = time.perf_counter()
+        self.cursor.advance(emu_s if emu_s is not None else t_now - t0)
+        self._step_times.append(time.perf_counter() - t0)
+        reserve = getattr(self.store, "reserve_prefetch", None) \
+            if self._pool_mode else None
+        events = []
+        t_v = self.cursor.now_s
+        for r, job in enumerate(jobs):
+            job.pos += int(lens[r])
+            req = job.req
+            done_prompt = job.pos >= len(req.prompt)
+            # spill the completed block boundary: the state at job.pos IS
+            # the boundary state (KV is positional; a finishing full-block
+            # wave lands exactly on one too) — future/concurrent requests
+            # sharing the prefix fetch it instead of recomputing
+            bi = job.pos // C - 1
+            if (self.prefix_cache is not None and job.pos % C == 0
+                    and 0 <= bi < len(job.chain)
+                    and job.chain[bi] not in self.prefix_cache):
+                with jax.transfer_guard_device_to_host("allow"):
+                    snap, nbytes = extract_prefix(self.state, job.slot,
+                                                  job.pos)
+                self.stats.d2h_pulls += 1      # the spill's host snapshot
+                if self.prefix_cache.insert(job.chain[bi], snap, job.pos,
+                                            nbytes):
+                    self._reserve_bytes(nbytes)   # write-behind spill
+            if done_prompt:
+                tok = int(toks[r])
+                req.out.append(tok)
+                req.first_token_s = t_now
+                req.first_token_v = t_v
+                self.slots[job.slot] = req
+                self._tokens_host[job.slot] = tok
+                self._prefill_jobs.pop(job.slot)
+                self.stats.prefills += 1
+                self.stats.generated_tokens += 1
+                self.stats.ttft_s_sum += t_now - req.submitted_s
+                self.stats.ttft_v_sum += t_v - req.submitted_v
+                if self.proposer is not None:
+                    self.proposer.begin(job.slot, req.prompt + req.out)
+                events.append((req, [tok], self._finish_if_done(job.slot),
+                               len(req.out) - 1))
+                # the previous decode wave's prefetched keys predate this
+                # slot going live — force a recompute next decode wave
+                self._next_keys = None
+            elif reserve is not None:
+                # book the NEXT chunk's engram prefetch now — in flight
+                # between waves, refunded (LIFO) and re-priced with the
+                # real keys at the next wave, or refunded outright by a
+                # mid-prefill cancel
+                nxt = min(C, len(req.prompt) - job.pos)
+                tr = reserve(nxt * self.cfg.engram.n_tables * self._n_eng)
+                if tr is not None:
+                    job.resv.append(tr)
         return events
 
     # ----------------------------------------------------------- decode path
@@ -614,6 +983,17 @@ class Engine:
             return lambda: self._fetchers[j](gid=gid).reshape(B, S, -1)
 
         return [layer_fetch(j) for j in range(len(self._fetchers))]
+
+    def _decode_gated_fn(self, params, state, tokens, live):
+        """Decode step gated by slot liveness (chunked mode): dead and
+        mid-prefill rows keep their positions / recurrent state — the
+        prefill jobs' partial KV must not advance under a decode wave."""
+        logits, new_state = self._decode_fn(params, state, tokens)
+        return logits, gate_state(live, new_state, state)
+
+    def _decode_ext_gated_fn(self, params, state, tokens, rows, live):
+        logits, new_state = self._decode_ext_fn(params, state, tokens, rows)
+        return logits, gate_state(live, new_state, state)
 
     def _decode_wave(self) -> list:
         """One batched greedy-decode wave over the live slots — exactly one
@@ -654,7 +1034,19 @@ class Engine:
                                            self.tokens)
             rows = self.store.gather(
                 self.store.prefetch(len(active), fetch=fetch))
-        if self._decode_ext is not None:
+        if self.prefill_chunk is not None and self._prefill_jobs:
+            # prefill jobs in flight: gate the state update by liveness so
+            # their partial KV / positions are untouched by this wave
+            live = np.zeros((B,), np.bool_)
+            live[np.asarray(active)] = True
+            live_j = jnp.asarray(live)
+            if self._decode_ext is not None:
+                logits, self.state = self._decode_ext_gated(
+                    self.params, self.state, self.tokens, rows, live_j)
+            else:
+                logits, self.state = self._decode_gated(
+                    self.params, self.state, self.tokens, live_j)
+        elif self._decode_ext is not None:
             logits, self.state = self._decode_ext(self.params, self.state,
                                                   self.tokens, rows)
         else:
@@ -947,7 +1339,49 @@ class Engine:
             return 1e-3
         return float(np.median(self._step_times[-32:]))
 
-    def _charge_wave(self, keys_per_layer: list, fetch=None):
+    def _prefill_step_s(self, executed_tokens: int) -> float:
+        """Emulated cost of one prefill wave that executed
+        ``executed_tokens`` token-positions: the legacy flat one-batched-
+        step charge, or — under ``emu_prefill_scaled`` — compute-
+        proportional, normalized so ``max_batch`` token-positions (one
+        decode wave's worth of work) cost one decode step. Under the
+        scaled model a monolithic pow2 group prefill's cost lands between
+        two decode waves as one long stall, while a chunk wave's bounded
+        work keeps inter-token gaps flat — the operating point at which
+        chunking's claim is measurable."""
+        if not self.emu_prefill_scaled:
+            return self.emulate_step_s
+        return self.emulate_step_s * max(1.0,
+                                         executed_tokens / self.max_batch)
+
+    def _pool_link(self):
+        """The pool tier's clock link (prefix snapshots travel over the
+        same shared medium as the engram segment fetches); None when
+        clock-unbound (real mode / no pool tier)."""
+        if self.store is None:
+            return None
+        link = getattr(self.store, "_link", None)
+        if link is None:
+            backing = getattr(self.store, "backing", None)
+            if backing is not None:
+                link = getattr(backing, "_link", None)
+        return link
+
+    def _reserve_bytes(self, nbytes: int):
+        """Book a prefix-snapshot transfer (fetch or spill) on the pool
+        tier's link: ``nbytes`` at the tier's bandwidth, queued at this
+        replica's timeline position. Returns the ``Transfer`` (None when
+        clock-unbound) — a prefix hit is a tier byte-fetch on the shared
+        link, not a prefill pass."""
+        link = self._pool_link()
+        if link is None or not nbytes or not link.bandwidth_Bps:
+            return None
+        _, tr = link.reserve(self.cursor.now_s,
+                             float(nbytes) / link.bandwidth_Bps,
+                             nbytes=int(nbytes))
+        return tr
+
+    def _charge_wave(self, keys_per_layer: list, fetch=None, step_s=None):
         """Issue one retrieval wave through the store and charge its stall.
 
         ``keys_per_layer``: one flat packed segment-key array per Engram
@@ -956,9 +1390,13 @@ class Engine:
         The scheduler computes the per-layer window overshoot, which is
         slept (real point) or accounted (emulated point). Returns the
         per-layer gathered rows when ``fetch`` is given (a per-layer fetch
-        list or a fused callable)."""
-        report = self.scheduler.step(keys_per_layer, self._step_estimate_s(),
-                                     fetch=fetch)
+        list or a fused callable). ``step_s`` overrides the hideable
+        window (a scaled prefill wave's compute is longer than one decode
+        step, so its retrieval hides inside more)."""
+        report = self.scheduler.step(
+            keys_per_layer,
+            self._step_estimate_s() if step_s is None else step_s,
+            fetch=fetch)
         self.stats.stall_s += report.stall_s
         if self.emulate_step_s is None:
             if report.stall_s > 0:

@@ -24,13 +24,15 @@ model parallel hardware, not a serial loop).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Optional
 
 import numpy as np
 
 from ..core.hashing import engram_indices
 from ..models.model import init_params
-from ..pool.cache import SharedCache, SharedCacheStats, TinyLFUAdmission
+from ..pool.cache import (PrefixCacheStats, PrefixKVCache, SharedCache,
+                          SharedCacheStats, TinyLFUAdmission)
 from ..pool.store import make_store, segment_keys
 from ..pool.tiers import TIERS
 from .clock import VirtualClock
@@ -49,6 +51,7 @@ class RouterStats:
     cache: Optional[SharedCacheStats] = None
     migrations: int = 0                 # mid-flight re-dispatches
     clock: Optional[dict] = None        # VirtualClock.stats() snapshot
+    prefix_cache: Optional[PrefixCacheStats] = None   # fleet prefix KV
 
     @property
     def cache_hit_rate(self) -> float:
@@ -95,11 +98,22 @@ class Router:
                  policy: str = "round_robin", shared_cache: bool = True,
                  params=None, seed: int = 0,
                  redispatch: Optional[bool] = None,
-                 redispatch_skew: int = 2, **engine_kwargs):
+                 redispatch_skew: int = 2,
+                 prefix_cache_bytes: int = 0,
+                 shared_prefix_cache: bool = True, **engine_kwargs):
         """``shared_cache``: mount one `SharedCache` across all replicas
         (needs ``pool`` and ``cfg.engram.store.cache_rows > 0``); False
         keeps the per-replica private caches `make_store` would build —
         the baseline the shared cache is measured against.
+
+        ``prefix_cache_bytes``: byte budget for a prefix KV cache
+        (pool/cache.PrefixKVCache) over chunk-boundary prefill snapshots;
+        needs ``prefill_chunk`` in the engine kwargs. With
+        ``shared_prefix_cache`` (default) the fleet mounts ONE cache —
+        replica B restores the prefix replica A prefilled, so shared
+        Zipf prefixes are prefilled once fleet-wide — while False gives
+        each replica a private cache of the same budget (the baseline
+        the ≥2x prefill-FLOPs claim is measured against).
 
         ``redispatch``: continuous re-dispatch — every `step()` the router
         re-examines fleet load on the shared clock and migrates *queued*
@@ -137,6 +151,12 @@ class Router:
             if link_clock is not None:
                 cache_link = link_clock.link(
                     "cache:shared", TIERS[scfg.cache_tier].bandwidth_Bps)
+        self.prefix_cache: Optional[PrefixKVCache] = None
+        if prefix_cache_bytes > 0:
+            chunk = engine_kwargs.get("prefill_chunk")
+            assert chunk, "prefix_cache_bytes needs prefill_chunk"
+            if shared_prefix_cache:
+                self.prefix_cache = PrefixKVCache(prefix_cache_bytes, chunk)
         if params is None:
             params = init_params(cfg, seed)
         self.replicas: list[EngramRuntime] = []
@@ -147,11 +167,19 @@ class Router:
                 store = make_store(cfg.engram, pool,
                                    cache=self.shared_cache.view(name),
                                    clock=link_clock, cache_link=cache_link)
+            pfx = None
+            if self.prefix_cache is not None:
+                pfx = self.prefix_cache.view(name)
+            elif prefix_cache_bytes > 0:
+                # private baseline: same budget, no cross-replica reuse
+                pfx = PrefixKVCache(prefix_cache_bytes,
+                                    engine_kwargs["prefill_chunk"])
             # disjoint rid ranges: fleet-wide request ids stay unique, so
             # merged TokenEvent streams and handle lookups never collide
             eng = Engine(cfg, params=params, pool=pool, seed=seed,
                          store=store, name=name, rid_start=r * 1_000_000,
-                         clock=self.clock, **engine_kwargs)
+                         clock=self.clock, prefix_cache=pfx,
+                         **engine_kwargs)
             self.replicas.append(eng.runtime())
         self._rr = 0
 
@@ -171,7 +199,11 @@ class Router:
             keys = segment_keys(e, idx).astype(np.uint64)
             mixed = keys * np.uint64(0x9E3779B97F4A7C15)
             return int(np.bitwise_xor.reduce(mixed) & np.uint64(0x7FFFFFFF))
-        return hash(tuple(int(t) for t in prompt)) & 0x7FFFFFFF
+        # crc32, not hash(): PYTHONHASHSEED salts tuple hashes per process,
+        # which would scatter identical prompts across replicas between
+        # runs — affinity must be fleet- and process-deterministic
+        data = np.asarray([int(t) for t in prompt], np.int64).tobytes()
+        return zlib.crc32(data) & 0x7FFFFFFF
 
     def select_replica(self, prompt) -> int:
         if len(self.replicas) == 1:
@@ -279,9 +311,11 @@ class Router:
             per[rt.engine.name] = rt.stats
         cache = self.shared_cache.stats() if self.shared_cache is not None \
             else None
+        pfx = self.prefix_cache.stats() if self.prefix_cache is not None \
+            else None
         return RouterStats(aggregate=agg, per_replica=per, cache=cache,
                            migrations=self.migrations,
-                           clock=self.clock.stats())
+                           clock=self.clock.stats(), prefix_cache=pfx)
 
     def store_stats(self) -> dict:
         """Per-replica `StoreStats` (each replica charges its own waves)."""

@@ -167,35 +167,46 @@ class EngramRuntime:
 
     def step(self) -> list[TokenEvent]:
         """One serving wave: admit queued requests into free slots, then
-        one decode (or speculative-verify) pass over the live batch.
-        Returns every token emitted this wave as per-request events, in
-        emission order; wall time accrues on the engine's stats and the
-        wave's virtual duration on its clock cursor."""
+        — chunked mode — one chunk-prefill wave over the in-flight
+        prefill jobs, then one decode (or speculative-verify) pass over
+        the live batch. Returns every token emitted this step as
+        per-request events, in emission order, each stamped with the
+        virtual time of the wave that emitted it; wall time accrues on
+        the engine's stats and the step's virtual duration on its clock
+        cursor."""
         eng = self.engine
         t0 = time.perf_counter()
+        waves = []
         raw = eng._admit()
-        if eng.spec is not None:
-            raw += eng._spec_wave()
-        else:
-            raw += eng._decode_wave()
+        if raw:
+            waves.append((raw, eng.cursor.now_s))
+        if eng.prefill_chunk is not None:
+            raw = eng._chunk_wave()
+            if raw:
+                waves.append((raw, eng.cursor.now_s))
+        raw = eng._spec_wave() if eng.spec is not None \
+            else eng._decode_wave()
+        if raw:
+            waves.append((raw, eng.cursor.now_s))
         eng.stats.wall_s += time.perf_counter() - t0
         eng.stats.v_time_s = eng.cursor.now_s
-        t_v = eng.cursor.now_s
         events = []
-        for req, emitted, finished, base in raw:
-            h = self.handles.get(req.rid)
-            for i, tok in enumerate(emitted):
-                last = i == len(emitted) - 1
-                ev = TokenEvent(rid=req.rid, token=tok, index=base + i,
-                                finished=finished and last, t_s=t_v)
-                events.append(ev)
-                if h is not None:
-                    h._push(ev)
-            if finished:
-                # terminal: drop the registry entry so a long-lived
-                # runtime stays bounded — the handle object (and its
-                # buffered events) lives on with whoever holds it
-                self.handles.pop(req.rid, None)
+        for raw, t_v in waves:
+            for req, emitted, finished, base in raw:
+                h = self.handles.get(req.rid)
+                for i, tok in enumerate(emitted):
+                    last = i == len(emitted) - 1
+                    ev = TokenEvent(rid=req.rid, token=tok, index=base + i,
+                                    finished=finished and last, t_s=t_v)
+                    events.append(ev)
+                    req.stamps.append(t_v)
+                    if h is not None:
+                        h._push(ev)
+                if finished:
+                    # terminal: drop the registry entry so a long-lived
+                    # runtime stays bounded — the handle object (and its
+                    # buffered events) lives on with whoever holds it
+                    self.handles.pop(req.rid, None)
         return events
 
     def cancel(self, handle) -> bool:

@@ -15,11 +15,27 @@ place when decoding resumes — so their rollback is just the positions
 rewind. Recurrent leaves (conv / ssm / xLSTM cell states) have no
 positional identity; they are snapshotted per verify step and re-selected
 at the per-slot accepted length.
+
+``gate_state`` is the chunked-prefill counterpart: a chunk wave unrolls C
+decode steps over rows with ragged valid lengths, and a row past its
+length must not advance — recurrent leaves / positions / last_tokens are
+re-selected per row, while KV leaves keep the new buffers (the invalid
+step's garbage write landed at the un-advanced ``positions[b]`` and is
+overwritten by the next real write at that index before it is ever
+attended — the same masking argument as speculative rollback).
+
+``extract_prefix`` / ``restore_prefix`` are block-granular KV restore at
+an arbitrary prefill offset: one slot's state is pulled to the host with
+its KV leaves sliced to the first ``length`` positions (the prefix-cache
+snapshot), and restored later — possibly on another replica — by padding
+the KV axis back to decode capacity and scatter-writing the batch-1 tree
+over a free slot (``update_slots``).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # KV-cache leaves: positional, masked by `positions`, rolled back for free.
 KV_KEYS = frozenset({"k", "v", "c_kv", "k_rope"})
@@ -82,6 +98,78 @@ def select_slots(state, slots: jax.Array):
         return jnp.moveaxis(jnp.moveaxis(leaf, ax, 0)[slots], 0, ax)
 
     return jax.tree_util.tree_map_with_path(one, state)
+
+
+def gate_state(valid: jax.Array, new_state, old_state):
+    """Per-row validity gate for one unrolled chunk-prefill step.
+
+    ``valid (B,)`` bool: rows that really consumed this step's token keep
+    ``new_state``; exhausted rows keep ``old_state`` for recurrent leaves,
+    positions and last_tokens. KV leaves always keep the new buffers —
+    see the module docstring for why the invalid rows' garbage writes are
+    unreachable."""
+
+    def one(path, new_leaf, old_leaf):
+        if new_leaf is None:
+            return None
+        if _leaf_key(path) in KV_KEYS:
+            return new_leaf
+        ax = batch_axis(path, new_leaf)
+        shape = [1] * new_leaf.ndim
+        shape[ax] = valid.shape[0]
+        return jnp.where(valid.reshape(shape), new_leaf, old_leaf)
+
+    return jax.tree_util.tree_map_with_path(one, new_state, old_state)
+
+
+def _seq_axis(path, leaf):
+    """KV-sequence axis of a leaf, or None for non-positional leaves."""
+    axes = _STATE_AXES.get(_leaf_key(path))
+    if axes is None or "kv_seq" not in axes:
+        return None
+    return leaf.ndim - len(axes) + axes.index("kv_seq")
+
+
+def extract_prefix(state, slot: int, length: int):
+    """Host snapshot of one slot's state at prefill offset ``length``:
+    batch-1 numpy tree with KV leaves sliced to ``[:length]`` positions.
+    Returns ``(snapshot, nbytes)`` — the byte count is what a prefix-cache
+    spill/fetch transfers over the pool link."""
+    nbytes = 0
+
+    def one(path, leaf):
+        nonlocal nbytes
+        if leaf is None:
+            return None
+        ax = batch_axis(path, leaf)
+        sub = jnp.moveaxis(jnp.moveaxis(leaf, ax, 0)[slot:slot + 1], 0, ax)
+        sq = _seq_axis(path, sub)
+        if sq is not None:
+            sub = jnp.moveaxis(jnp.moveaxis(sub, sq, 0)[:length], 0, sq)
+        arr = np.asarray(sub)
+        nbytes += arr.nbytes
+        return arr
+
+    return jax.tree_util.tree_map_with_path(one, state), nbytes
+
+
+def restore_prefix(snapshot, max_len: int):
+    """Device tree from an ``extract_prefix`` snapshot: KV leaves padded
+    back out to ``max_len`` decode capacity (positions beyond the prefix
+    are masked by ``positions`` until overwritten), ready for
+    ``update_slots`` into a free slot."""
+
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        sq = _seq_axis(path, leaf)
+        if sq is not None and leaf.shape[sq] < max_len:
+            pad = [(0, 0)] * leaf.ndim
+            pad[sq] = (0, max_len - leaf.shape[sq])
+            leaf = np.pad(leaf, pad)
+        return jnp.asarray(leaf)
+
+    return jax.tree_util.tree_map_with_path(one, snapshot)
 
 
 # ---------------------------------------------------------------------------

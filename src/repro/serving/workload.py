@@ -21,17 +21,36 @@ hope, not a property. A `Workload` pins it down:
     request carries its `klass` tag so proposer/cache quality can be
     broken down per class (RouterStats.speculation);
   * per-request `max_new` — fixed, or varied per request with
-    `max_new_jitter` (staggered completions exercise slot churn).
+    `max_new_jitter` (staggered completions exercise slot churn);
+  * shared prefixes — `prefix_pool=N, prefix_len=L` prepends each prompt
+    with one of N hot L-token prefixes (`prefix_zipf_alpha` skews which),
+    the fleet prefix-KV-cache's traffic shape: many requests sharing long
+    identical prompt heads with private tails.
 
 The token streams are bit-compatible with the legacy `run_once` synthesis
-(same per-request RNG seeding), so `--compare` output is preserved.
+(same per-request RNG seeding), so `--compare` output is preserved; the
+prefix fields are additive (``prefix_pool=0`` leaves every legacy stream
+untouched) and seed their own RNGs through ``_crc_seed`` — crc32-chained,
+so two replicas (or two processes: no ``hash()`` salting) synthesizing
+the same workload produce bit-identical prompts, which is what makes
+cross-replica prefix-chain keys collide and the fleet cache shareable.
 """
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Optional
 
 import numpy as np
+
+
+def _crc_seed(*parts: int) -> int:
+    """Process-deterministic 31-bit RNG seed from integer parts (crc32-
+    chained; ``hash()`` would be salted per process by PYTHONHASHSEED)."""
+    h = 0
+    for p in parts:
+        h = zlib.crc32(np.int64(int(p)).tobytes(), h)
+    return h & 0x7FFFFFFF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +72,9 @@ class Workload:
     prompts: tuple = ()          # explicit prompt pool (overrides synthesis)
     zipf_alpha: float = 0.0      # Zipf-skewed prompt tokens (0 = uniform)
     zipf_fraction: float = 1.0   # fraction of requests that are Zipf class
+    prefix_pool: int = 0         # shared prompt prefixes (0 = none)
+    prefix_len: int = 0          # tokens per shared prefix
+    prefix_zipf_alpha: float = 0.0  # prefix-id skew (0 = round-robin)
     arrival: str = "batch"       # batch | paced | poisson
     arrival_every: int = 1       # paced: one new request every N steps
     qps: float = 0.0             # poisson: offered load (virtual req/s)
@@ -64,6 +86,9 @@ class Workload:
         assert 0.0 <= self.zipf_fraction <= 1.0, self.zipf_fraction
         if self.arrival == "poisson":
             assert self.qps > 0.0, "poisson arrivals need qps > 0"
+        if self.prefix_pool or self.prefix_len:
+            assert self.prefix_pool > 0 and self.prefix_len > 0, \
+                (self.prefix_pool, self.prefix_len)
 
     def build(self, vocab_size: int) -> list[RequestSpec]:
         """Materialize the request list (deterministic in `seed`)."""
@@ -97,6 +122,22 @@ class Workload:
                     prng = np.random.RandomState(self.seed * 1000 + pr)
                     prompt = tuple(int(t) for t in
                                    prng.randint(1, vocab_size, size=plen))
+            if self.prefix_pool:
+                # shared prefix: pid's token stream is keyed by (seed,
+                # pid) alone, so every request — on any replica, in any
+                # process — regenerates the identical prefix and their
+                # chain keys collide in the fleet prefix cache
+                if self.prefix_zipf_alpha:
+                    from ..pool.cache import zipf_keys
+                    pid = int(zipf_keys(1, self.prefix_pool,
+                                        alpha=self.prefix_zipf_alpha,
+                                        seed=_crc_seed(self.seed, 1, r))[0])
+                else:
+                    pid = r % self.prefix_pool
+                xrng = np.random.RandomState(_crc_seed(self.seed, 2, pid))
+                prompt = tuple(int(t) for t in
+                               xrng.randint(1, vocab_size,
+                                            size=self.prefix_len)) + prompt
             max_new = self.max_new
             if self.max_new_jitter:
                 max_new += r % (self.max_new_jitter + 1)

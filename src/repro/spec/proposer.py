@@ -178,27 +178,47 @@ class DraftModelProposer(_ProposerBase):
         self.params = params if params is not None \
             else init_params(self.cfg, seed)
         max_len = self.ctx_len + spec.max_draft + 1
-        self._prefill = jax.jit(build_prefill_step(self.cfg, flags,
-                                                   max_len=max_len))
-        self._decode = jax.jit(build_decode_step(self.cfg, flags))
+        self._prefill_fn = build_prefill_step(self.cfg, flags,
+                                              max_len=max_len)
+        self._decode_fn = build_decode_step(self.cfg, flags)
+        self._prefill = jax.jit(self._prefill_fn)
+        self._decode = jax.jit(self._decode_fn)
+        # one fused jitted [prefill + (k-1) greedy decodes] per draft
+        # depth: a proposal used to cost k dispatches and k host argmax
+        # pulls per call — on the serving hot path, per live slot per
+        # wave. The fused call returns the whole (k,) draft in ONE pull.
+        self._fused: dict = {}
+
+    def _fused_for(self, k: int):
+        import jax
+        import jax.numpy as jnp
+        fn = self._fused.get(k)
+        if fn is not None:
+            return fn
+
+        def fused(params, batch):
+            logits, state = self._prefill_fn(params, batch)
+            out = [jnp.argmax(logits, axis=-1).astype(jnp.int32)]  # (1,)
+            for _ in range(k - 1):
+                logits, state = self._decode_fn(params, state, out[-1])
+                out.append(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+            return jnp.stack(out, axis=1)            # (1, k)
+
+        fn = self._fused[k] = jax.jit(fused)
+        return fn
 
     def propose(self, slot: int, context: Sequence[int],
                 k: int) -> list[int]:
         import jax.numpy as jnp
         ctx = list(context)[-self.ctx_len:]
-        if not ctx:
+        if not ctx or k <= 0:
             return [0] * k
         toks = np.zeros((1, self.ctx_len), np.int32)
         toks[0, :len(ctx)] = ctx
-        logits, state = self._prefill(
+        out = self._fused_for(k)(
             self.params, {"tokens": jnp.asarray(toks),
                           "lengths": jnp.asarray([len(ctx)], np.int32)})
-        out = [int(jnp.argmax(logits[0]))]
-        for _ in range(k - 1):
-            logits, state = self._decode(self.params, state,
-                                         jnp.asarray([out[-1]], jnp.int32))
-            out.append(int(jnp.argmax(logits[0])))
-        return out[:k]
+        return [int(t) for t in np.asarray(out)[0]]  # ONE host pull
 
 
 class ScriptedProposer(_ProposerBase):

@@ -1,0 +1,215 @@
+"""Chunked prefill + fleet prefix KV cache: token equality vs the
+monolithic group-prefill path, prefix snapshot restore correctness,
+cross-replica sharing, mid-prefill cancel (slot + clock-refund
+invariants), bit-identical prefix workload synthesis, and the batched
+draft-model proposer."""
+import dataclasses
+import zlib
+
+import numpy as np
+import pytest
+
+from conftest import reduced
+
+from repro.configs.base import SpecConfig
+from repro.models.model import init_params
+from repro.pool.cache import PrefixKVCache
+from repro.serving import EngramRuntime, Workload, serve
+from repro.serving.workload import _crc_seed
+
+
+def tiny_cfg():
+    cfg = reduced("deepseek-7b")
+    return dataclasses.replace(cfg, n_layers=3, layer_types=("attn",) * 3,
+                               attn_kinds=("global",) * 3,
+                               ffn_types=("dense",) * 3,
+                               engram=dataclasses.replace(cfg.engram,
+                                                          layers=(1,)))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return tiny_cfg()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, 0)
+
+
+def _prompts(n, length, seed=0):
+    rng = np.random.RandomState(seed)
+    return [[int(t) for t in rng.randint(1, 500, size=length)]
+            for _ in range(n)]
+
+
+def _drain_tokens(rt, prompts, max_new=4):
+    handles = [rt.submit(list(p), max_new) for p in prompts]
+    rt.drain()
+    assert all(h.finished for h in handles)
+    return [h.tokens for h in handles]
+
+
+# --------------------------------------------------------------- equality
+@pytest.mark.parametrize("pool", [None, "CXL"])
+def test_chunked_matches_monolithic(cfg, params, pool):
+    """Chunked prefill is a pure schedule change: same streams, token for
+    token, as the monolithic group prefill — including the decode waves
+    that run gated while later admissions are still mid-prefill."""
+    prompts = _prompts(5, 21)
+    kw = dict(params=params, pool=pool, max_batch=2, max_len=64,
+              prompt_bucket=8)
+    ref = _drain_tokens(EngramRuntime(cfg, **kw), prompts)
+    out = _drain_tokens(EngramRuntime(cfg, prefill_chunk=8, **kw), prompts)
+    assert out == ref
+
+
+def test_prefix_cache_preserves_tokens(cfg, params):
+    """Two requests sharing a 16-token prompt head: the second restores
+    the head's KV blocks from the prefix cache instead of recomputing
+    them — and still emits exactly the uncached streams."""
+    head = _prompts(1, 16, seed=1)[0]
+    prompts = [head + p for p in _prompts(2, 7, seed=2)]
+    kw = dict(params=params, pool="CXL", max_batch=2, max_len=64,
+              prompt_bucket=8, prefill_chunk=8)
+    ref = _drain_tokens(EngramRuntime(cfg, **kw), prompts)
+
+    rt = EngramRuntime(cfg, prefix_cache=PrefixKVCache(64 << 20, 8), **kw)
+    # serialize so the first request's spilled blocks are visible to the
+    # second's admission lookup
+    out = [_drain_tokens(rt, [p])[0] for p in prompts]
+    assert out == ref
+    st = rt.engine.stats
+    assert st.prefix_hit_blocks == 2          # both head blocks restored
+    assert st.prefill_tokens_restored == 16
+    assert st.prefill_compute_tokens < 2 * st.prefill_tokens_restored + 64
+
+
+def test_fleet_shares_prefix_blocks(cfg, params):
+    """A fleet-wide cache lets replica B restore blocks replica A
+    prefilled; private caches force every replica to prefill each hot
+    prefix itself. Output tokens identical to the un-chunked fleet."""
+    w = Workload(requests=6, max_new=3, arrival="paced", arrival_every=3,
+                 prefix_pool=1, prefix_len=24, seed=0)
+    kw = dict(pool="CXL", replicas=2, policy="round_robin", params=params,
+              max_batch=2, max_len=64, prompt_bucket=8,
+              emulate_step_s=2e-4)
+    base = serve(cfg, w, **kw)
+    shared = serve(cfg, w, prefill_chunk=8, prefix_cache_bytes=64 << 20,
+                   shared_prefix_cache=True, **kw)
+    assert [h.tokens for h in shared.handles] == \
+        [h.tokens for h in base.handles]
+    pfx = shared.router.stats().prefix_cache
+    assert pfx is not None and pfx.hit_blocks > 0
+    # both replicas must have looked up AND hit (sharing, not locality)
+    views = {name: st.prefix_hit_blocks
+             for name, st in shared.router.stats().per_replica.items()}
+    assert sum(1 for v in views.values() if v > 0) == 2, views
+
+
+# ----------------------------------------------------------------- cancel
+def test_cancel_mid_prefill(cfg, params):
+    """Cancelling a request whose prompt is partially prefilled must free
+    the slot, refund every outstanding clock booking newest-first (the
+    LIFO refund invariant: refunded seconds/bytes grow), and leave the
+    engine able to serve subsequent traffic cleanly."""
+    rt = EngramRuntime(cfg, params=params, pool="CXL", max_batch=2,
+                       max_len=96, prompt_bucket=8, emulate_step_s=2e-4,
+                       prefill_chunk=8)
+    eng = rt.engine
+    p1, p2 = _prompts(2, 40, seed=3)
+    h1 = rt.submit(p1, max_new=3)
+    h2 = rt.submit(p2, max_new=3)
+    rt.step()                                  # admit + first chunk wave
+    assert eng._prefill_jobs
+    job = next(j for j in eng._prefill_jobs.values() if j.req is h1.request)
+    assert 0 < job.pos < len(p1)               # genuinely mid-prefill
+    assert job.resv                            # outstanding bookings
+
+    free0, r0 = len(eng._free), eng.clock.refunded_s
+    assert rt.cancel(h1)
+    assert h1.cancelled and not h1.tokens
+    assert job.slot not in eng._prefill_jobs
+    assert len(eng._free) == free0 + 1         # slot back in the pool
+    assert eng.clock.refunded_s > r0           # bookings rolled back
+    assert eng.clock.refunded_bytes > 0
+    assert not job.resv                        # nothing left outstanding
+
+    rt.drain()                                 # survivor unaffected
+    assert h2.finished and len(h2.tokens) == 3
+    assert not eng._prefill_jobs and not eng.busy
+    # the freed slot is immediately reusable
+    h3 = rt.submit(p1, max_new=3)
+    rt.drain()
+    assert h3.finished and len(h3.tokens) == 3
+
+
+def test_chunked_rejects_speculation(cfg, params):
+    """The gated decode wave cannot gate the fused verify pass — the
+    combination is refused loudly, not silently corrupted."""
+    spec_cfg = dataclasses.replace(cfg, spec=SpecConfig(max_draft=2))
+    with pytest.raises(AssertionError):
+        EngramRuntime(spec_cfg, params=params, max_batch=2, max_len=64,
+                      prompt_bucket=8, prefill_chunk=8)
+
+
+# --------------------------------------------------------------- workload
+def test_prefix_workload_deterministic():
+    """Prefix synthesis is keyed by (seed, pid) through crc32 — two
+    builds (any replica, any process: no hash() salting) produce
+    bit-identical prompts, and same-pid requests share the exact head."""
+    w = Workload(requests=6, max_new=2, prefix_pool=2, prefix_len=16,
+                 seed=3)
+    a, b = w.build(1000), w.build(1000)
+    assert [r.prompt for r in a] == [r.prompt for r in b]
+    heads = [r.prompt[:16] for r in a]
+    assert heads[0] == heads[2] == heads[4]    # pid = r % pool
+    assert heads[1] == heads[3] == heads[5]
+    assert heads[0] != heads[1]
+    # process-determinism: the synthesis reduces to a pinned checksum
+    crc = 0
+    for r in a:
+        crc = zlib.crc32(np.asarray(r.prompt, np.int64).tobytes(), crc)
+    assert crc == 1534446016, crc
+
+
+def test_prefix_fields_are_additive():
+    """prefix_pool=0 leaves legacy streams untouched; prefix_pool>0 only
+    prepends — the legacy suffix synthesis is bit-identical."""
+    plain = Workload(requests=4, max_new=2, seed=5).build(100)
+    fixed = Workload(requests=4, max_new=2, prefix_pool=2, prefix_len=8,
+                     seed=5).build(100)
+    for p, f in zip(plain, fixed):
+        assert f.prompt[8:] == p.prompt
+        assert len(f.prompt) == len(p.prompt) + 8
+    assert _crc_seed(5, 2, 0) == _crc_seed(5, 2, 0)
+    assert _crc_seed(5, 2, 0) != _crc_seed(5, 2, 1)
+
+
+# --------------------------------------------------------------- proposer
+def test_draft_proposer_batched_equality(cfg):
+    """The fused one-dispatch proposal must equal the step-by-step
+    prefill + k-1 greedy decodes it replaced."""
+    import jax.numpy as jnp
+
+    from repro.spec.proposer import DraftModelProposer
+    spec = SpecConfig(proposer="draft", max_draft=4, draft_layers=1,
+                      draft_context=16)
+    prop = DraftModelProposer(cfg, spec, seed=0)
+    ctx = [5, 17, 42, 9, 311, 7, 12, 3]
+    k = 4
+    got = prop.propose(0, ctx, k)
+    assert len(got) == k
+
+    toks = np.zeros((1, prop.ctx_len), np.int32)
+    toks[0, :len(ctx)] = ctx
+    logits, state = prop._prefill(
+        prop.params, {"tokens": jnp.asarray(toks),
+                      "lengths": jnp.asarray([len(ctx)], np.int32)})
+    ref = [int(np.asarray(jnp.argmax(logits, axis=-1))[0])]
+    for _ in range(k - 1):
+        logits, state = prop._decode(
+            prop.params, state, jnp.asarray([ref[-1]], jnp.int32))
+        ref.append(int(np.asarray(jnp.argmax(logits, axis=-1))[0]))
+    assert got == ref
+    assert prop.propose(0, [], k) == [0] * k   # empty-context fallback
