@@ -20,23 +20,34 @@ CXL_SWITCH_BW_Bps = 512e9
 
 def contended_bandwidth_Bps(adapter_Bps: float, readers: int,
                             nnodes: int = 1,
-                            switch_Bps: float = CXL_SWITCH_BW_Bps) -> float:
+                            switch_Bps: float = CXL_SWITCH_BW_Bps,
+                            pool_nodes=None) -> float:
     """Effective per-reader bandwidth for ``readers`` replicas spread over
-    ``nnodes`` hosts: replicas on one host split that host's adapter, and
-    every replica splits the shared switch. The min of the two budgets is
-    what a reader's wire time is priced against."""
+    ``nnodes`` hosts: replicas on one host split that host's adapter,
+    every replica splits the shared switch, and the *pool* side supplies
+    at most ``pool_nodes`` adapters' worth of aggregate bandwidth (the
+    sharded fabric's M nodes — ``pool/fabric.py`` is the charged twin of
+    this budget). ``pool_nodes=None`` assumes a pool node per reader host
+    (symmetric provisioning; the pool side then never binds, which is the
+    historical behaviour). The min of the three budgets is what a
+    reader's wire time is priced against."""
     readers = max(1, int(readers))
-    per_node = max(1, -(-readers // max(1, int(nnodes))))
-    return min(adapter_Bps / per_node, switch_Bps / readers)
+    nnodes = max(1, int(nnodes))
+    per_node = max(1, -(-readers // nnodes))
+    pool = nnodes if pool_nodes is None else max(1, int(pool_nodes))
+    return min(adapter_Bps / per_node,
+               adapter_Bps * pool / readers,
+               switch_Bps / readers)
 
 
 def contended_tier(tier, readers: int, nnodes: int = 1,
-                   switch_Bps: float = CXL_SWITCH_BW_Bps):
+                   switch_Bps: float = CXL_SWITCH_BW_Bps,
+                   pool_nodes=None):
     """``TierSpec`` with its bandwidth replaced by the contended budget —
     the analytic twin of the clock's measured link queueing."""
     return dataclasses.replace(
         tier, bandwidth_Bps=contended_bandwidth_Bps(
-            tier.bandwidth_Bps, readers, nnodes, switch_Bps))
+            tier.bandwidth_Bps, readers, nnodes, switch_Bps, pool_nodes))
 
 
 DEFAULT_PRICES = {

@@ -74,15 +74,39 @@ def _per_layer_fetches(fetch, n_layers: int):
     return [shared.layer(i) for i in range(n_layers)]
 
 
+def _split_entry(h: PrefetchHandle) -> tuple:
+    """Trace entry for one per-layer handle: ``(hits, misses)`` — plus
+    the recorded per-shard split when the store is fabric-backed, so the
+    replay fans out to the same nodes."""
+    if h.shards is None:
+        return (h.hits, h.misses)
+    return (h.hits, h.misses, h.shards)
+
+
 @dataclasses.dataclass(frozen=True)
 class TraceWave:
     """One charged wave on the virtual timeline — enough to *replay* the
     charge through a fresh store/scheduler/clock and land on bit-identical
     stalls (``simulator.replay_stall_s``): the wave's virtual issue time,
-    its step latency, and the measured per-layer (hits, misses) split."""
+    its step latency, and the measured per-layer (hits, misses[, shards])
+    split."""
     issued_at_s: float
     step_s: float
-    split: tuple                       # ((hits, misses), ...) per layer
+    split: tuple                       # ((hits, misses[, shards]), ...)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecTraceWave:
+    """One charged *speculative* wave: the per-position, per-layer splits
+    the block prefetched, the surviving-position count verification
+    settled on, and the pipelined early-issue credit — everything
+    ``replay_stall_s`` needs to re-run ``speculative_wave`` +
+    ``charge_spec`` and land on the identical batch-max stall."""
+    issued_at_s: float
+    step_s: float
+    splits: tuple                      # [position][layer] split entries
+    n_keep: int
+    early_issue_s: float
 
 
 @dataclasses.dataclass
@@ -196,7 +220,7 @@ class PrefetchScheduler:
         issued = handles[0].issued_at_s if handles else 0.0
         self.trace.append(TraceWave(
             issued_at_s=issued, step_s=step_latency_s,
-            split=tuple((h.hits, h.misses) for h in handles)))
+            split=tuple(_split_entry(h) for h in handles)))
         return WaveReport(stall_s=stall, latency_s=lat_max, hidden=hidden,
                           handles=handles, issued_at_s=issued)
 
@@ -348,6 +372,13 @@ class PrefetchScheduler:
         m = report.n_positions
         n_keep = max(1, min(int(n_keep), m))
         stall = max(report.overshoot_s[:n_keep])
+        issued = report.handles[0][0].issued_at_s if report.handles[0] \
+            else 0.0
+        self.trace.append(SpecTraceWave(
+            issued_at_s=issued, step_s=report.step_s,
+            splits=tuple(tuple(_split_entry(h) for h in per_layer)
+                         for per_layer in report.handles),
+            n_keep=n_keep, early_issue_s=report.early_issue_s))
         per_slot = None
         if n_keep_by_slot is not None and report.slot_sorted is not None:
             # packed path: per-(slot, position) unique counts were computed

@@ -111,8 +111,17 @@ def engram_step_overhead_s(ecfg: EngramConfig, point: ServingPoint,
     return compute_overhead_s + report.stall_s, report.hidden
 
 
+def _replay_segments(entry):
+    """Trace split entry -> ``Segments``: ``(hits, misses)`` or the
+    fabric-recorded ``(hits, misses, shards)``."""
+    from .store import Segments
+    return Segments(entry[0], entry[1],
+                    shards=entry[2] if len(entry) > 2 else None)
+
+
 def replay_stall_s(ecfg: EngramConfig, tier, trace, *, layers, n_layers,
-                   store_cfg=None, clock=None) -> float:
+                   store_cfg=None, clock=None,
+                   fabric_nodes=None) -> float:
     """Replay an engine-recorded wave trace (``PrefetchScheduler.trace``)
     through a *fresh* clock-bound store + scheduler — the simulator's
     prediction of the stall time the engine measured.
@@ -122,22 +131,43 @@ def replay_stall_s(ecfg: EngramConfig, tier, trace, *, layers, n_layers,
     bit-for-bit with the engine's ``stall_s`` on the same trace — the
     regression contract tests/test_clock.py pins down. ``trace`` entries
     carry the virtual issue time, step latency, and per-layer
-    (hits, misses) split of each charged wave."""
+    (hits, misses[, shards]) split of each charged wave; speculative
+    waves (``SpecTraceWave``) additionally carry the per-position splits,
+    the verified surviving-position count, and the pipelined early-issue
+    credit, and are re-charged through the same ``speculative_wave`` +
+    ``charge_spec`` pair the engine ran.
+
+    ``fabric_nodes``: replay a fabric-backed run — the store mounts a
+    fresh ``PoolFabric`` of that many nodes (static placement; the
+    no-failure replay contract) and the recorded per-shard splits drive
+    the same multi-node charge."""
     from ..serving.clock import VirtualClock
-    from .scheduler import PrefetchScheduler
-    from .store import Segments, make_store
+    from .scheduler import PrefetchScheduler, SpecTraceWave
+    from .store import make_store
     clock = clock if clock is not None else VirtualClock()
     cursor = clock.cursor("replay")
-    store = make_store(ecfg, tier, store_cfg=store_cfg, clock=clock)
+    fabric = None
+    if fabric_nodes:
+        from .fabric import PoolFabric
+        fabric = PoolFabric(ecfg, int(fabric_nodes), tier=tier, clock=clock)
+    store = make_store(ecfg, tier, store_cfg=store_cfg, clock=clock,
+                       fabric=fabric)
     store.bind_cursor(cursor)
     sched = PrefetchScheduler(store, ecfg, layers=layers, n_layers=n_layers)
     total = 0.0
     for wave in trace:
         cursor.advance_to(wave.issued_at_s)
         cursor.next_wave()
-        report = sched.step([Segments(h, m) for h, m in wave.split],
-                            wave.step_s)
-        total += report.stall_s
+        if isinstance(wave, SpecTraceWave):
+            report = sched.speculative_wave(
+                [[_replay_segments(e) for e in per_layer]
+                 for per_layer in wave.splits],
+                wave.step_s, early_issue_s=wave.early_issue_s)
+            total += sched.charge_spec(report, wave.n_keep)
+        else:
+            report = sched.step([_replay_segments(e) for e in wave.split],
+                                wave.step_s)
+            total += report.stall_s
     return total
 
 
@@ -185,7 +215,8 @@ def scalability_table(ecfg: EngramConfig, point: ServingPoint,
                       dps=(1, 2), nnodes=(1, 2),
                       engram_compute_frac: float = 0.07,
                       dp_efficiency: float = 0.73,
-                      node_overhead: float = 0.013) -> list:
+                      node_overhead: float = 0.013,
+                      pool_nodes=None) -> list:
     """Table 3 analogue: DP x nnode scaling.
 
     Semantics follow the paper's SGLang setup: ``dp`` is the number of
@@ -195,14 +226,21 @@ def scalability_table(ecfg: EngramConfig, point: ServingPoint,
     overhead (paper measures ~1-1.5%). DP replicas on one host share the
     host (CPU/PCIe) — the paper's DP=2 yields 1.46x, captured by
     ``dp_efficiency`` (calibrated to Table 3). The pool side contends on
-    the shared switch (512 GB/s) and per-node adapters (56 GB/s)."""
+    the shared switch (512 GB/s) and per-node adapters (56 GB/s).
+
+    ``pool_nodes``: shard count on the *pool* side of the switch (the
+    fabric's M) — the pool's aggregate adapter budget then caps the
+    readers too. Default (None) assumes a pool node per reader host, the
+    symmetric provisioning under which the pool side never binds (the
+    Table 3 calibration)."""
     from .cost import contended_tier
     out = []
     for dp in dps:
         for nn in nnodes:
             # replicas split their host adapter and the shared switch —
             # the provisioned-bandwidth budget pool/cost.py owns
-            tier = contended_tier(TIERS["CXL"], dp, nnodes=nn)
+            tier = contended_tier(TIERS["CXL"], dp, nnodes=nn,
+                                  pool_nodes=pool_nodes)
             comp = engram_compute_frac * point.step_latency_s
             ovh, hidden = engram_step_overhead_s(ecfg, point, tier, comp)
             step = point.step_latency_s + ovh
@@ -212,6 +250,7 @@ def scalability_table(ecfg: EngramConfig, point: ServingPoint,
             scale = 1.0 if dp == 1 else dp * dp_efficiency
             out.append({
                 "dp": dp, "nnode": nn,
+                "pool_nodes": nn if pool_nodes is None else int(pool_nodes),
                 "tokens_per_s": per_replica * scale,
                 "per_replica_tps": per_replica,
                 "hidden": hidden,

@@ -100,9 +100,13 @@ class Segments:
     both token->segment expansion and the cache. The simulator's trace
     replay (``simulator.replay_stall_s``) feeds the engine's *recorded*
     per-wave splits back through the same store code path — the one-clock
-    regression contract."""
+    regression contract. ``shards``: optional recorded per-shard split
+    (``pool/fabric.py``) so a fabric-charged wave replays its exact
+    multi-node fan-out instead of re-deriving it from keys it no longer
+    has."""
     hits: int
     misses: int
+    shards: Optional[tuple] = None
 
     @property
     def n(self) -> int:
@@ -122,6 +126,7 @@ class PrefetchHandle:
     wait_s: float = 0.0                # queueing delay on shared links
     issued_at_s: float = 0.0           # virtual issue time (clock-bound)
     reservations: list = dataclasses.field(default_factory=list)
+    shards: Optional[tuple] = None     # per-shard split (fabric-backed)
 
 
 @dataclasses.dataclass
@@ -435,23 +440,30 @@ class CachedStore(_StoreBase):
         seg = segment_bytes(self.ecfg)
         resv = []
         t_hit = self.cache_tier.read_latency_s(hits, seg) if hits else 0.0
-        t_miss = self.backing.latency_for_segments(misses)
         w_hit = w_miss = 0.0
-        if self.cursor is not None:
-            wave = self.cursor.wave_tag()
-            now = self.cursor.now_s
-            if hits and self._cache_link is not None:
-                w_hit, tr = self._cache_link.reserve(
-                    now, self.cache_tier.service_s(hits, seg),
-                    nbytes=hits * seg, wave=wave)
+        charge_miss = getattr(self.backing, "charge_misses", None)
+        if charge_miss is not None:
+            # fabric-backed: the miss wave fans out per shard (node links
+            # + switch), charged by the fabric itself — a single backing-
+            # link booking would hide the multi-node contention
+            miss_path, w_miss, trs = charge_miss(misses) if misses \
+                else (0.0, 0.0, [])
+            resv.extend(trs)
+        else:
+            t_miss = self.backing.latency_for_segments(misses)
+            if (misses and self.cursor is not None
+                    and getattr(self.backing, "_link", None) is not None):
+                w_miss, tr = self.backing._link.reserve(
+                    self.cursor.now_s, self.backing.occupancy_s(misses),
+                    nbytes=misses * seg, wave=self.cursor.wave_tag())
                 resv.append(tr)
-            blink = getattr(self.backing, "_link", None)
-            if misses and blink is not None:
-                w_miss, tr = blink.reserve(
-                    now, self.backing.occupancy_s(misses),
-                    nbytes=misses * seg, wave=wave)
-                resv.append(tr)
-        lat = max(t_hit + w_hit, t_miss + w_miss)
+            miss_path = t_miss + w_miss
+        if hits and self.cursor is not None and self._cache_link is not None:
+            w_hit, tr = self._cache_link.reserve(
+                self.cursor.now_s, self.cache_tier.service_s(hits, seg),
+                nbytes=hits * seg, wave=self.cursor.wave_tag())
+            resv.append(tr)
+        lat = max(t_hit + w_hit, miss_path)
         return lat, max(w_hit, w_miss), resv
 
     def ideal_latency_s(self, batch_tokens: int, hit_rate: float) -> float:
@@ -539,7 +551,7 @@ STRATEGY_TIERS: dict[str, Optional[str]] = {
 
 def make_store(ecfg: EngramConfig, tier: TierSpec | str | None,
                store_cfg=None, cache=None, clock=None,
-               cache_link=None) -> EngramStore:
+               cache_link=None, fabric=None) -> EngramStore:
     """Build the store for a backing tier, honouring ``ecfg.store`` knobs
     (cache capacity / tier / admission). ``tier=None`` -> LocalStore.
 
@@ -550,11 +562,19 @@ def make_store(ecfg: EngramConfig, tier: TierSpec | str | None,
     ``clock``: bind the store to a fleet ``VirtualClock`` — the backing
     tier contends on one fleet-wide link, and the hot-row cache on
     ``cache_link`` when given (the router passes one link for a shared
-    cache) or a private per-store link otherwise."""
+    cache) or a private per-store link otherwise.
+
+    ``fabric``: mount a sharded ``pool/fabric.PoolFabric`` as the backing
+    instead of a single-link tier — the fabric owns its own clock links,
+    so ``clock`` only matters for the cache front-end then."""
     scfg = store_cfg if store_cfg is not None else ecfg.store
-    if tier is None:
+    if tier is None and fabric is None:
         return LocalStore(ecfg)
-    base = TierStore(ecfg, tier, clock=clock)
+    if fabric is not None:
+        from .fabric import FabricStore
+        base = FabricStore(ecfg, fabric)
+    else:
+        base = TierStore(ecfg, tier, clock=clock)
     if cache is not None:
         tier_name = scfg.cache_tier if scfg is not None else "DRAM"
         return CachedStore(base, cache_tier=tier_name, cache=cache,

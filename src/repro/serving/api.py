@@ -94,6 +94,12 @@ def serve(cfg, workload: Workload, *, pool=None, replicas: int = 1,
     prefill snapshots — one fleet-wide cache by default, private
     per-replica caches with ``shared_prefix_cache=False``; a single
     replica always gets its own. Needs ``prefill_chunk``.
+
+    ``fabric_nodes`` (engine_kwargs): shard the pool over that many
+    nodes behind one CXL switch (pool/fabric.PoolFabric). A router fleet
+    shares ONE fabric (the Router intercepts it as a named parameter); a
+    single replica builds its own. ``result.frontend.fabric`` (router)
+    or ``result.frontend.engine.fabric`` exposes it for failure drills.
     """
     specs = workload.build(cfg.vocab_size)
     prefix_cache_bytes = int(engine_kwargs.pop("prefix_cache_bytes", 0))

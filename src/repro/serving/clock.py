@@ -32,6 +32,18 @@ one batched access whose internal parallelism the tier model already
 prices — so a *single* replica charges exactly what the uncontended tier
 model says (wait 0), and contention appears only across replicas/waves.
 
+Queueing discipline: the busy *horizon* (``free_at_s``, refunds, byte
+ledger) is work-conserving FIFO — total booked occupancy is what it
+always was. The *wait* returned to a contended reader, however, is
+processor-sharing (fair queueing): concurrent owners (distinct replicas,
+identified by the first element of their wave tags) split the link
+capacity equally, so a short transfer fair-shares past a long one
+instead of serialising behind it — the interleaved-DMA behaviour of a
+real switch port. A reservation that meets only its *own* backlog (same
+owner, or untagged ``wave=None`` bookings, which are serial by
+definition) takes the exact FIFO path, so single-reader charges are
+bit-identical to the pre-fair-queueing model.
+
 ``refund(transfer)`` releases a still-queued reservation — the mid-flight
 ``cancel()`` path returns the bandwidth a cancelled request's speculative
 prefetch had booked.
@@ -98,14 +110,35 @@ class Cursor:
         return f"Cursor({self.name!r}, now={self.now_s:.6f}s)"
 
 
+def _owner(wave: object):
+    """Owner identity of a wave tag: ``Cursor.wave_tag()`` is
+    ``(replica_name, wave_no)`` — the replica is the flow, successive
+    waves of one replica are serial. Untagged bookings own nothing."""
+    if isinstance(wave, tuple) and wave:
+        return wave[0]
+    return None
+
+
 class Link:
     """A shared bandwidth resource on the virtual timeline.
 
-    Single-queue occupancy model: a reservation starts when the link is
-    free, runs for its service time, and delays whoever comes next. Same-
-    ``wave`` reservations share their start point and *accumulate*
-    occupancy (one batched access; its internal concurrency is already in
-    the tier's service model).
+    Occupancy ledger is single-queue and work-conserving: a reservation's
+    booked slot starts when the link is free, runs for its service time,
+    and pushes the ``free_at_s`` horizon out — refunds, byte totals and
+    busy time are untouched by the queueing discipline. Same-``wave``
+    reservations share their start point and *accumulate* occupancy (one
+    batched access; its internal concurrency is already in the tier's
+    service model).
+
+    The *wait* charged to a contended reservation is processor-sharing:
+    live flows (one per owner — see ``_owner``) split the link equally,
+    each finishing when its remaining bytes drain at the fair rate. A
+    reservation whose only backlog belongs to itself (same owner or
+    untagged) keeps the exact FIFO wait, so single-reader charges stay
+    bit-identical to the historical single-queue model; equal-service
+    two-reader waits are also unchanged (the fair share of an equal peer
+    equals serialising behind it). Divergence appears exactly where it
+    should: unequal transfers under multi-owner contention.
     """
 
     def __init__(self, name: str, bandwidth_Bps: float = 0.0):
@@ -122,20 +155,68 @@ class Link:
         self.refunded_s = 0.0
         self._last_wave: object = None
         self._last_start: float = 0.0
+        self._last_wait: float = 0.0
+        # live flow ledger for fair queueing: [owner, start_s, end_s]
+        # per cross-wave reservation (same-wave siblings extend the tail
+        # entry); pruned against ``now`` on every cross-wave reserve.
+        self._flows: list[list] = []
+
+    @staticmethod
+    def _ps_wait(own_s: float, others: dict, service_s: float) -> float:
+        """Processor-sharing completion wait for a newcomer with
+        ``own_s`` of serial backlog and ``service_s`` of new work,
+        against competing owners with ``others[owner]`` remaining work
+        each. All live flows drain at rate 1/n (n = live flows); a flow
+        exits when its remaining work is done, raising everyone's rate.
+        Returns completion time minus service (the queueing delay)."""
+        virtual = own_s + service_s         # the newcomer's flow length
+        t = 0.0
+        drained = 0.0
+        n = len(others) + 1
+        for r in sorted(others.values()):
+            if r >= virtual:
+                break                        # newcomer finishes first
+            t += (r - drained) * n
+            drained = r
+            n -= 1
+        t += (virtual - drained) * n
+        return max(0.0, t - service_s)
 
     def reserve(self, now_s: float, service_s: float, nbytes: int = 0,
                 wave: object = None) -> tuple[float, Transfer]:
         """Book ``service_s`` of occupancy; -> (queue wait, transfer)."""
         service_s = max(0.0, float(service_s))
+        now = float(now_s)
         if wave is not None and wave == self._last_wave:
             start = self._last_start          # same wave: parallel access
             self.free_at_s = max(self.free_at_s, start) + service_s
+            if self._flows:
+                self._flows[-1][2] = self.free_at_s
+            else:
+                self._flows.append([_owner(wave), start, self.free_at_s])
+            wait = self._last_wait            # the wave queued once
         else:
-            start = max(float(now_s), self.free_at_s)
+            start = max(now, self.free_at_s)
+            wait = start - now                # FIFO wait (exact ledger)
+            owner = _owner(wave)
+            if self._flows:
+                self._flows = [f for f in self._flows if f[2] > now]
+            if owner is not None and self._flows:
+                own_s = 0.0
+                others: dict = {}
+                for o, st, en in self._flows:
+                    rem = en - max(now, st)
+                    if o is None or o == owner:
+                        own_s += rem          # serial with the newcomer
+                    else:
+                        others[o] = others.get(o, 0.0) + rem
+                if others:
+                    wait = self._ps_wait(own_s, others, service_s)
             self._last_wave = wave
             self._last_start = start
+            self._last_wait = wait
             self.free_at_s = start + service_s
-        wait = start - float(now_s)
+            self._flows.append([owner, start, self.free_at_s])
         tr = Transfer(link=self, start_s=start, service_s=service_s,
                       nbytes=int(nbytes), wave=wave)
         self.reservations += 1
@@ -163,6 +244,12 @@ class Link:
             self.busy_s -= tr.service_s
             self.bytes_total -= tr.nbytes
             self._last_wave = None                  # start point is gone
+            for i in range(len(self._flows) - 1, -1, -1):
+                if self._flows[i][2] == tr.end_s:   # shrink the tail flow
+                    self._flows[i][2] = tr.start_s
+                    if self._flows[i][2] <= self._flows[i][1]:
+                        del self._flows[i]
+                    break
         self.refunds += 1
         self.refunded_s += tr.service_s
         return True

@@ -289,7 +289,8 @@ class Engine:
                  store=None, name: Optional[str] = None,
                  rid_start: int = 0, clock: Optional[VirtualClock] = None,
                  prefill_chunk: Optional[int] = None, prefix_cache=None,
-                 emu_prefill_scaled: bool = False):
+                 emu_prefill_scaled: bool = False,
+                 fabric=None, fabric_nodes: Optional[int] = None):
         """``emulate_step_s``: evaluate the pool stalls at a production
         operating point (ms-scale decode steps) instead of this host's
         CPU step times — stalls are then accounted in ``emu_time_s``
@@ -327,7 +328,12 @@ class Engine:
         ``clock``: the fleet ``VirtualClock`` (serving/clock.py) — the
         router shares one across replicas so their waves and store
         transfers interleave on a single timeline; a lone engine gets a
-        private clock."""
+        private clock.
+
+        ``fabric`` / ``fabric_nodes``: back the pool with a sharded
+        ``pool/fabric.PoolFabric`` — pass a built fabric (the router
+        shares ONE across replicas) or a node count for a lone engine to
+        build its own on its clock. Needs a pooled tier."""
         assert not cfg.is_encoder, "serving needs a decoder"
         self.cfg = cfg
         self.name = name
@@ -353,6 +359,7 @@ class Engine:
         self.store = None
         self.scheduler = None
         self._fetchers = None
+        self.fabric = fabric
         if self.has_engram:
             # link contention is modelled only at the emulated operating
             # point, where wave cadence is clock-driven and replica
@@ -361,8 +368,14 @@ class Engine:
             # cross-replica queueing would double-count what the host
             # already serializes — and sleep the bogus wait.
             link_clock = self.clock if emulate_step_s is not None else None
+            if store is None and fabric is None and fabric_nodes:
+                assert pool is not None, "fabric_nodes needs a pooled tier"
+                from ..pool.fabric import PoolFabric
+                self.fabric = PoolFabric(cfg.engram, int(fabric_nodes),
+                                         tier=pool, clock=link_clock)
             self.store = store if store is not None \
-                else make_store(cfg.engram, pool, clock=link_clock)
+                else make_store(cfg.engram, pool, clock=link_clock,
+                                fabric=self.fabric)
             if hasattr(self.store, "bind_cursor"):
                 # the store's link reservations run on this replica's
                 # timeline position (contention is cross-replica)

@@ -52,6 +52,7 @@ class RouterStats:
     migrations: int = 0                 # mid-flight re-dispatches
     clock: Optional[dict] = None        # VirtualClock.stats() snapshot
     prefix_cache: Optional[PrefixCacheStats] = None   # fleet prefix KV
+    fabric: Optional[dict] = None       # PoolFabric.stats() snapshot
 
     @property
     def cache_hit_rate(self) -> float:
@@ -100,7 +101,8 @@ class Router:
                  redispatch: Optional[bool] = None,
                  redispatch_skew: int = 2,
                  prefix_cache_bytes: int = 0,
-                 shared_prefix_cache: bool = True, **engine_kwargs):
+                 shared_prefix_cache: bool = True,
+                 fabric_nodes: Optional[int] = None, **engine_kwargs):
         """``shared_cache``: mount one `SharedCache` across all replicas
         (needs ``pool`` and ``cfg.engram.store.cache_rows > 0``); False
         keeps the per-replica private caches `make_store` would build —
@@ -121,7 +123,15 @@ class Router:
         the least-loaded replica's by ``redispatch_skew``. Defaults to on
         for `least_loaded` (dispatch-time balance decays as completion
         times diverge mid-flight) and off for `cache_affinity` (migration
-        would defeat proposer/KV warmth) and `round_robin`."""
+        would defeat proposer/KV warmth) and `round_robin`.
+
+        ``fabric_nodes``: shard the Engram pool over that many nodes
+        behind one switch (pool/fabric.PoolFabric). The fleet shares ONE
+        fabric — every replica's waves contend on the same per-node and
+        switch-port links, and a mid-serving ``router.fabric.kill(n)``
+        degrades every replica at once (the failure drill). A named
+        router parameter, not an engine kwarg: forwarding it would build
+        M nodes *per replica*."""
         assert replicas >= 1, replicas
         assert policy in POLICIES, (policy, POLICIES)
         self.cfg = cfg
@@ -140,6 +150,12 @@ class Router:
         # cross-replica queueing would double-count host serialization)
         link_clock = self.clock \
             if engine_kwargs.get("emulate_step_s") is not None else None
+        self.fabric = None
+        if (fabric_nodes and pool is not None and cfg.engram is not None
+                and cfg.engram.enabled):
+            from ..pool.fabric import PoolFabric
+            self.fabric = PoolFabric(cfg.engram, int(fabric_nodes),
+                                     tier=pool, clock=link_clock)
         scfg = cfg.engram.store if cfg.engram is not None else None
         if (shared_cache and pool is not None and scfg is not None
                 and cfg.engram.enabled and scfg.cache_rows > 0):
@@ -166,7 +182,8 @@ class Router:
             if self.shared_cache is not None:
                 store = make_store(cfg.engram, pool,
                                    cache=self.shared_cache.view(name),
-                                   clock=link_clock, cache_link=cache_link)
+                                   clock=link_clock, cache_link=cache_link,
+                                   fabric=self.fabric)
             pfx = None
             if self.prefix_cache is not None:
                 pfx = self.prefix_cache.view(name)
@@ -179,7 +196,7 @@ class Router:
             eng = Engine(cfg, params=params, pool=pool, seed=seed,
                          store=store, name=name, rid_start=r * 1_000_000,
                          clock=self.clock, prefix_cache=pfx,
-                         **engine_kwargs)
+                         fabric=self.fabric, **engine_kwargs)
             self.replicas.append(eng.runtime())
         self._rr = 0
 
@@ -315,7 +332,9 @@ class Router:
             else None
         return RouterStats(aggregate=agg, per_replica=per, cache=cache,
                            migrations=self.migrations,
-                           clock=self.clock.stats(), prefix_cache=pfx)
+                           clock=self.clock.stats(), prefix_cache=pfx,
+                           fabric=self.fabric.stats()
+                           if self.fabric is not None else None)
 
     def store_stats(self) -> dict:
         """Per-replica `StoreStats` (each replica charges its own waves)."""

@@ -1,0 +1,336 @@
+"""Sharded pool fabric: crc32 shard routing (process-deterministic,
+property-tested), multi-node charging, failure injection (degrade / kill
++ live shard rescue), fabric-backed serving, processor-sharing link
+waits, and the replay regression extended to fabric + speculative waves."""
+import dataclasses
+import zlib
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from conftest import reduced
+
+from repro.configs.base import SpecConfig, StoreConfig
+from repro.pool.fabric import FabricStore, PoolFabric, crc32_keys, shard_of
+from repro.pool.simulator import replay_stall_s, scalability_table
+from repro.pool.store import Segments, TierStore, make_store, segment_bytes
+from repro.pool.tiers import TIERS
+from repro.serving import Engine, VirtualClock, Workload, serve
+from repro.spec import ScriptedProposer
+
+
+def tiny_cfg(cache_rows: int = 0):
+    cfg = reduced("deepseek-7b")
+    e = dataclasses.replace(cfg.engram, layers=(1,),
+                            store=StoreConfig(cache_rows=cache_rows))
+    return dataclasses.replace(cfg, n_layers=3, layer_types=("attn",) * 3,
+                               attn_kinds=("global",) * 3,
+                               ffn_types=("dense",) * 3, engram=e)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return tiny_cfg()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    from repro.models.model import init_params
+    return init_params(cfg, 0)
+
+
+@pytest.fixture(scope="module")
+def ecfg(cfg):
+    return cfg.engram
+
+
+# --------------------------------------------------------- shard routing
+
+def test_crc32_matches_zlib_reference():
+    """The vectorized table-driven crc32 is bit-identical to zlib's, per
+    key, over sign/boundary cases — and pinned against hardcoded values,
+    so a process with a different PYTHONHASHSEED (or an accidental switch
+    to Python hash()) cannot silently re-route the fleet's shards."""
+    keys = np.array([0, 1, -1, 2**31, -(2**31), 123456789123,
+                     2**63 - 1, -(2**63)], np.int64)
+    ref = np.array([zlib.crc32(k.astype("<i8").tobytes()) for k in keys],
+                   np.uint32)
+    assert np.array_equal(crc32_keys(keys), ref)
+    # process-deterministic pin (computed once, must never drift)
+    assert shard_of(np.arange(16), 4).tolist() == \
+        [1, 3, 0, 2, 3, 1, 2, 0, 0, 2, 1, 3, 2, 0, 3, 1]
+
+
+@settings(max_examples=25)
+@given(st.lists(st.integers(min_value=-(2**62), max_value=2**62),
+                min_size=1, max_size=64),
+       st.integers(min_value=1, max_value=7))
+def test_every_key_maps_to_exactly_one_shard(keys, n_shards):
+    """Property: routing is a total function onto [0, n_shards) — each
+    key lands on exactly one shard, deterministically, and the per-shard
+    counts partition the key stream."""
+    a = np.asarray(keys, np.int64)
+    s = shard_of(a, n_shards)
+    assert s.shape == a.shape
+    assert ((s >= 0) & (s < n_shards)).all()
+    assert np.array_equal(s, shard_of(a, n_shards))      # deterministic
+    counts = np.bincount(s, minlength=n_shards)
+    assert counts.sum() == a.size                        # a partition
+
+
+def test_fabric_split_partitions_unique_keys(ecfg):
+    fab = PoolFabric(ecfg, 4)
+    keys = np.arange(1000, dtype=np.int64)
+    split = fab.split(keys)
+    assert split.sum() == keys.size
+    # element-wise agreement with per-key routing
+    assert np.array_equal(
+        split, np.bincount(shard_of(keys, fab.n_shards), minlength=4))
+
+
+@settings(max_examples=10)
+@given(st.integers(min_value=2, max_value=6),
+       st.integers(min_value=0, max_value=5))
+def test_kill_preserves_partition_invariant(n_nodes, kill_seed):
+    """Property: after any kill sequence that leaves >= 1 survivor,
+    every shard is placed on exactly one ALIVE node."""
+    ecfg = tiny_cfg().engram
+    fab = PoolFabric(ecfg, n_nodes, n_shards=2 * n_nodes)
+    rng = np.random.RandomState(kill_seed)
+    for _ in range(n_nodes - 1):                 # kill all but one
+        alive = [i for i, n in enumerate(fab.nodes) if n.alive]
+        fab.kill(int(rng.choice(alive)), now_s=float(len(fab.rescues)))
+        assert fab.placement.size == fab.n_shards
+        assert all(fab.nodes[int(p)].alive for p in fab.placement)
+    with pytest.raises(AssertionError):
+        fab.kill([i for i, n in enumerate(fab.nodes) if n.alive][0])
+
+
+# ------------------------------------------------------ charging semantics
+
+def test_single_node_fabric_matches_tier_store(ecfg):
+    """M=1 fabric = the plain pool: same software + service, and the
+    512 GB/s switch never binds behind a 56 GB/s adapter — sharding is
+    free when there is nothing to shard (the bench's 1.15x bound at
+    store level, exact here)."""
+    fab = FabricStore(ecfg, PoolFabric(ecfg, 1))
+    plain = TierStore(ecfg, "CXL")
+    for n in (1, 7, 128, 5000):
+        assert fab.latency_for_segments(n) == plain.latency_for_segments(n)
+    keys = np.arange(777, dtype=np.int64)
+    assert fab.prefetch(keys).latency_s == plain.prefetch(keys).latency_s
+
+
+def test_multi_node_fanout_charges_max_over_shards(ecfg):
+    """A wave's fan-out completes at the slowest shard + switch on top:
+    4 nodes each serving ~n/4 beat one node serving n."""
+    seg = segment_bytes(ecfg)
+    keys = np.arange(2048, dtype=np.int64)
+    f1 = FabricStore(ecfg, PoolFabric(ecfg, 1))
+    f4 = FabricStore(ecfg, PoolFabric(ecfg, 4))
+    h1, h4 = f1.prefetch(keys), f4.prefetch(keys)
+    assert h4.latency_s < h1.latency_s
+    assert h4.shards is not None and sum(h4.shards) == h4.n_segments
+    # exact: software on the total + max(per-node service, switch)
+    tier = TIERS["CXL"]
+    expect = tier.software_s(h4.n_segments) + max(
+        max(tier.service_s(c, seg) for c in h4.shards),
+        h4.n_segments * seg / f4.fabric.switch_Bps)
+    assert h4.latency_s == pytest.approx(expect)
+
+
+def test_degrade_slows_only_that_node(ecfg):
+    fab = PoolFabric(ecfg, 2)
+    st_ = FabricStore(ecfg, fab)
+    keys = np.arange(512, dtype=np.int64)
+    before = st_.prefetch(keys).latency_s
+    fab.degrade(0, 8.0)
+    after = st_.prefetch(keys).latency_s
+    assert after > before
+    fab.degrade(0, 1.0)                          # heals
+    assert st_.prefetch(keys).latency_s == before
+
+
+def test_kill_rescue_window_falls_back_then_recovers(ecfg):
+    """During a shard's rescue copy its reads pay the backing tier; once
+    the copy lands the fabric is whole again on the survivors."""
+    clock = VirtualClock()
+    fab = PoolFabric(ecfg, 4, clock=clock)
+    st_ = FabricStore(ecfg, fab)
+    st_.bind_cursor(clock.cursor("r0"))
+    keys = np.arange(1024, dtype=np.int64)
+    healthy = st_.prefetch(keys).latency_s
+    done = fab.kill(2, now_s=0.0)
+    assert done > 0.0 and done == fab.rescue_done_s()
+    during = st_.prefetch(keys)                  # cursor at 0: mid-copy
+    assert during.latency_s > healthy            # RDMA fallback window
+    clock.cursor("r0").advance_to(done)
+    after = st_.prefetch(keys)
+    assert after.latency_s < during.latency_s
+    # rescue copies were booked on the live links (contend with serving)
+    assert clock.links["fabric:fallback"].reservations >= 1
+    assert clock.links["fabric:switch"].bytes_total >= fab.shard_bytes
+
+
+# -------------------------------------------------- processor-sharing link
+
+def test_ps_link_short_transfer_passes_long_one():
+    """Fair queueing: a short transfer behind a long one waits for its
+    fair-share completion (2x its service), not the full long transfer;
+    the booked horizon stays work-conserving FIFO either way."""
+    clock = VirtualClock()
+    link = clock.link("x", 1e9)
+    w1, _ = link.reserve(0.0, 10e-6, wave=("a", 0))
+    w2, _ = link.reserve(0.0, 2e-6, wave=("b", 0))
+    w3, _ = link.reserve(0.0, 2e-6, wave=("c", 0))
+    assert w1 == 0.0
+    # b: own flow 2us among {a:10us remaining, c arrives after}; 2 flows
+    # at rate 1/2 -> completes at 4us -> waits 2us (FIFO: 10us)
+    assert w2 == pytest.approx(2e-6)
+    # c: competes with a (10us) and b (2us): rate 1/3 until b exits at
+    # t=6us (c drained 2us exactly) -> waits 4us (FIFO: 12us)
+    assert w3 == pytest.approx(4e-6)
+    assert link.free_at_s == pytest.approx(14e-6)        # FIFO horizon
+
+
+def test_ps_link_single_reader_charges_unchanged():
+    """One owner (same or untagged flows only) takes the exact FIFO
+    path: waits equal the horizon backlog, bit-for-bit."""
+    clock = VirtualClock()
+    link = clock.link("x", 1e9)
+    w1, _ = link.reserve(0.0, 5e-6, wave=("a", 0))
+    w2, _ = link.reserve(0.0, 3e-6)                      # untagged
+    w3, _ = link.reserve(0.0, 2e-6, wave=("a", 1))       # same owner
+    assert (w1, w2) == (0.0, 5e-6)
+    assert w3 == pytest.approx(8e-6)
+    # equal-service peers: PS wait == FIFO wait (fair share of an equal
+    # peer = serialising behind it) — the historical two-replica numbers
+    clock2 = VirtualClock()
+    link2 = clock2.link("y", 1e9)
+    link2.reserve(0.0, 4e-6, wave=("a", 0))
+    w, _ = link2.reserve(0.0, 4e-6, wave=("b", 0))
+    assert w == pytest.approx(4e-6)
+
+
+def test_ps_link_refund_rolls_back_flows():
+    clock = VirtualClock()
+    link = clock.link("x", 1e9)
+    _, t1 = link.reserve(0.0, 5e-6, wave=("a", 0))
+    _, t2 = link.reserve(0.0, 3e-6, wave=("b", 0))
+    assert clock.refund(t2)                      # tail: full rollback
+    assert link.free_at_s == pytest.approx(5e-6)
+    w, _ = link.reserve(0.0, 5e-6, wave=("c", 0))
+    assert w == pytest.approx(5e-6)              # equal-service peer of a
+
+
+# ------------------------------------------- serving + replay regressions
+
+def test_fleet_shares_one_fabric(cfg, params):
+    w = Workload(requests=6, max_new=4, arrival="poisson", qps=2000.0,
+                 seed=3)
+    res = serve(cfg, w, pool="CXL", params=params, replicas=2,
+                max_batch=2, max_len=32, prompt_bucket=8,
+                emulate_step_s=2e-4, fabric_nodes=4)
+    router = res.router
+    assert router.fabric is not None
+    assert all(rt.engine.fabric is router.fabric
+               for rt in router.replicas)
+    fs = router.stats().fabric
+    assert fs is not None and fs["n_nodes"] == 4
+    # both replicas' waves crossed the one switch port
+    sw = fs["links"]["fabric:switch"]
+    assert sw["reservations"] > 0 and sw["bytes"] > 0
+    assert len(res.ttft_v()) == 6
+
+
+def test_fabric_engine_stall_matches_simulator_replay(cfg, params):
+    """The one-clock regression, extended to the fabric: a multi-shard
+    trace (recorded per-shard splits) replays bit-identically, for a
+    hidden fabric tier (CXL) and an overshooting one (RDMA)."""
+    for pool, expect_stall in (("CXL", False), ("RDMA", True)):
+        eng = Engine(cfg, params=params, max_batch=2, max_len=32,
+                     prompt_bucket=8, pool=pool, emulate_step_s=5e-5,
+                     fabric_nodes=2)
+        for r in range(4):
+            eng.submit([5 + r, 17, 42], max_new=4)
+        stats = eng.run()
+        assert (stats.stall_s > 0) == expect_stall
+        # the trace recorded real shard splits, not even stand-ins
+        assert any(len(e) > 2 for wv in eng.scheduler.trace
+                   for e in wv.split)
+        pred = replay_stall_s(cfg.engram, pool, eng.scheduler.trace,
+                              layers=cfg.engram_layers(),
+                              n_layers=cfg.n_layers, fabric_nodes=2)
+        assert pred == stats.stall_s            # same code path: exact
+
+
+def test_spec_wave_trace_replays_bit_identical(cfg, params):
+    """Satellite: speculative waves are trace-recorded (per-position
+    splits + verified n_keep + early-issue credit) and replay through
+    speculative_wave/charge_spec to the identical stall total."""
+    prompts = [[5, 17, 42], [7, 8, 9, 10]]
+    ref = Engine(cfg, params=params, max_batch=2, max_len=64,
+                 prompt_bucket=8, pool="RDMA", emulate_step_s=5e-5)
+    rids = [ref.submit(list(p), max_new=8) for p in prompts]
+    ref.run()
+    streams = [p + ref.done[r].out for p, r in zip(prompts, rids)]
+    for pipeline in (False, True):
+        eng = Engine(cfg, params=params, max_batch=2, max_len=64,
+                     prompt_bucket=8, pool="RDMA", emulate_step_s=5e-5,
+                     spec=SpecConfig(max_draft=3, pipeline=pipeline),
+                     proposer=ScriptedProposer(streams))
+        for p in prompts:
+            eng.submit(list(p), max_new=8)
+        stats = eng.run()
+        assert stats.stall_s > 0                # RDMA overshoots
+        from repro.pool.scheduler import SpecTraceWave
+        assert any(isinstance(wv, SpecTraceWave)
+                   for wv in eng.scheduler.trace)
+        pred = replay_stall_s(cfg.engram, "RDMA", eng.scheduler.trace,
+                              layers=cfg.engram_layers(),
+                              n_layers=cfg.n_layers)
+        assert pred == stats.stall_s
+
+
+def test_cached_store_over_fabric_charges_fanout(ecfg):
+    """A hot-row cache in front of the fabric sends its misses through
+    the fabric's multi-node charge (even split), not a single link."""
+    e = dataclasses.replace(ecfg, store=StoreConfig(cache_rows=256))
+    clock = VirtualClock()
+    fab = PoolFabric(e, 4, clock=clock)
+    st_ = make_store(e, "CXL", fabric=fab)
+    st_.bind_cursor(clock.cursor("r0"))
+    assert st_.backing.fabric is fab
+    st_.prefetch(np.arange(2048, dtype=np.int64))        # cold: all miss
+    assert sum(clock.links[f"fabric:node{i}"].reservations
+               for i in range(4)) == 4
+    assert clock.links["fabric:switch"].reservations == 1
+
+
+# --------------------------------------------- analytic twin (pool/cost)
+
+def test_pool_nodes_threads_through_scalability_table(ecfg):
+    """Satellite: the provisioned-budget twin takes the fabric's shard
+    count. Defaults (pool node per reader host) keep the Table 3
+    calibration bit-identical; starving the pool side (1 node, 4 hosts)
+    binds on the pool's aggregate adapter budget."""
+    from repro.pool.cost import contended_bandwidth_Bps
+    from repro.pool.feasibility import paper_case_study
+    # default == historical values
+    assert contended_bandwidth_Bps(56e9, 4, nnodes=2) == \
+        contended_bandwidth_Bps(56e9, 4, nnodes=2, pool_nodes=2)
+    # pool side binds when undersized
+    assert contended_bandwidth_Bps(56e9, 4, nnodes=4, pool_nodes=1) == \
+        pytest.approx(56e9 / 4)
+    assert contended_bandwidth_Bps(56e9, 4, nnodes=4, pool_nodes=4) == \
+        pytest.approx(56e9)
+    point = paper_case_study()
+    base = scalability_table(ecfg, point)
+    rows = scalability_table(ecfg, point, pool_nodes=1)
+    assert [r["pool_nodes"] for r in base] == [1, 2, 1, 2]
+    by = {(r["dp"], r["nnode"]): r for r in rows}
+    base_by = {(r["dp"], r["nnode"]): r for r in base}
+    # one pool node serving 2 spread-out readers cannot beat the
+    # symmetric provisioning
+    assert by[(2, 2)]["tokens_per_s"] <= base_by[(2, 2)]["tokens_per_s"]
