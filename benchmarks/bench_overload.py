@@ -1,0 +1,345 @@
+"""Overload-survival benchmark: SLO attainment under bursty saturation.
+
+`bench_load.py` measures a fleet that never says no — every arrival is
+admitted and keeps its slot. This bench drives the *overload* regime
+(ROADMAP items 1 + 4): a two-state MMPP burst ramps the offered load past
+saturation and the serving stack must keep the interactive class inside
+its TTFT SLO by spending the three `OverloadPolicy` levers — per-class
+admission control at the router, priority dispatch, and preemption with
+KV spill to the pooled tier (pool/kvpool.py). Everything runs on the
+virtual clock: fully deterministic, no host-timing noise.
+
+Scenarios / checks (`BENCH_overload.json`; the CI ``overload-smoke`` job
+uploads the artifact and fails on a violated check):
+
+  * **A — burst ramp** (``policy_meets_slo`` / ``control_violates_slo``):
+    the same >= 2x-saturation MMPP workload served twice on a 2-replica
+    fleet — with the policy, interactive p99 TTFT lands inside the SLO;
+    the no-policy control (FIFO, never-preempt) blows through it.
+  * **B — preemption integrity** (``preempt_bit_identical`` /
+    ``spill_charged_on_link``): preempted-then-resumed requests emit
+    token streams bit-identical to a never-preempted control run, and
+    the spill/restore bytes are metered on the pool link + store ledger
+    under the ``"kv"`` traffic class.
+  * **C — KV/Engram arbitration** (``arbiter_rescues_hit_rate``): KV
+    spill landings evict hot Engram rows from the DRAM front cache and
+    drag the hit rate down; the `PoolArbiter` caps KV cache occupancy
+    and books page-granular link transfers, restoring the hit rate.
+
+``--kill N`` additionally composes the burst ramp with a mid-serving
+fabric node failure (pool/fabric.py) — reported, not gated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+
+import numpy as np
+
+from repro.configs.base import StoreConfig
+from repro.launch.train import reduced_config
+from repro.pool import PoolArbiter
+from repro.serving import (EngramRuntime, OverloadPolicy, SLOSpec, Workload,
+                           serve)
+
+from .common import OUT_DIR, emit, write_csv
+
+EMULATED_STEP_S = 2e-4       # production decode cadence (Table 2/3 point)
+SLO_TTFT_S = 3e-3            # interactive: first token within ~15 waves
+OVERLOAD_X = 3.0             # calm offered load vs fleet service capacity
+
+
+def _tiny_cfg(cache_rows: int = 0):
+    cfg = reduced_config("deepseek-7b")
+    e = dataclasses.replace(cfg.engram, layers=(1,),
+                            store=StoreConfig(cache_rows=cache_rows))
+    return dataclasses.replace(cfg, n_layers=3, layer_types=("attn",) * 3,
+                               attn_kinds=("global",) * 3,
+                               ffn_types=("dense",) * 3, engram=e)
+
+
+def _pct(xs, q) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def _policy() -> OverloadPolicy:
+    return OverloadPolicy(
+        slos={"interactive": SLOSpec("interactive", ttft_s=SLO_TTFT_S,
+                                     itl_s=1e-3, priority=10),
+              "batch": SLOSpec("batch", ttft_s=500e-3)},
+        queue_cap_by_class={"batch": 6}, defer_classes=("batch",),
+        spill_pool_bytes=64 << 20, spill_page_tokens=8)
+
+
+# ------------------------------------------------------ A: burst ramp
+
+
+def _burst_drive(cfg, *, policy: bool, requests: int, max_new: int,
+                 replicas: int = 2, seed: int = 3) -> dict:
+    """Serve one >= OVERLOAD_X-saturation MMPP burst ramp; identical
+    arrivals with and without the overload policy (the control keeps
+    FIFO dispatch and never sheds or preempts)."""
+    # fleet service capacity: replicas * max_batch slots, one token per
+    # slot per wave -> requests/s = slots / (max_new * step)
+    cap_rps = replicas * 4 / (max_new * EMULATED_STEP_S)
+    w = Workload(requests=requests, max_new=max_new, arrival="mmpp",
+                 qps=OVERLOAD_X * cap_rps, burst_factor=6.0,
+                 calm_s=0.02, burst_s=0.008, interactive_fraction=0.25,
+                 prompt_pool=max(2, requests // 4), seed=seed)
+    res = serve(cfg, w, pool="CXL", replicas=replicas,
+                policy="least_loaded", max_batch=4, max_len=64,
+                prompt_bucket=8, emulate_step_s=EMULATED_STEP_S,
+                slo_policy=_policy() if policy else None)
+    st = res.stats
+    rstats = res.router.stats()
+    row = {
+        "policy": policy, "requests": requests,
+        "offered_x_saturation": OVERLOAD_X,
+        "qps_calm": OVERLOAD_X * cap_rps,
+        "ttft_p50_int_ms": _pct(res.ttft_v("interactive"), 50) * 1e3,
+        "ttft_p99_int_ms": _pct(res.ttft_v("interactive"), 99) * 1e3,
+        "ttft_p99_batch_ms": _pct(res.ttft_v("batch"), 99) * 1e3,
+        "slo_int": res.slo_attainment("interactive"),
+        "slo_batch": res.slo_attainment("batch"),
+        "shed": rstats.shed, "deferred": rstats.deferred,
+        "preemptions": rstats.preemptions, "resumes": rstats.resumes,
+        "kv_spill_bytes": st.kv_spill_bytes,
+        "kv_restore_bytes": st.kv_restore_bytes,
+        "v_time_s": st.v_time_s,
+    }
+    if rstats.kv_pool is not None:
+        row["kv_pool_peak_bytes"] = rstats.kv_pool.peak_bytes
+        row["kv_pool_refused"] = rstats.kv_pool.refused
+    return row
+
+
+def _kill_drive(cfg, *, requests: int, max_new: int, nodes: int,
+                seed: int = 3) -> dict:
+    """Burst ramp over a sharded fabric with one node killed mid-burst:
+    overload survival composed with a pool-node failure (the PR 8 drill).
+    Reported, not gated — rescue keeps serving, numbers show the cost."""
+    from repro.serving import Router
+    cap_rps = 2 * 4 / (max_new * EMULATED_STEP_S)
+    w = Workload(requests=requests, max_new=max_new, arrival="mmpp",
+                 qps=OVERLOAD_X * cap_rps, burst_factor=6.0,
+                 calm_s=0.02, burst_s=0.008, interactive_fraction=0.25,
+                 prompt_pool=max(2, requests // 4), seed=seed)
+    specs = w.build(cfg.vocab_size)
+    router = Router(cfg, replicas=2, pool="CXL", policy="least_loaded",
+                    max_batch=4, max_len=64, prompt_bucket=8,
+                    emulate_step_s=EMULATED_STEP_S,
+                    slo_policy=_policy(), fabric_nodes=nodes)
+    handles, i, killed = [], 0, False
+    while i < len(specs) or router.busy:
+        if not router.busy and i < len(specs):
+            router.advance_to(specs[i].arrival_s)
+        while i < len(specs) and specs[i].arrival_s <= router.now_s:
+            s = specs[i]
+            handles.append(router.submit(list(s.prompt), s.max_new,
+                                         arrival_s=s.arrival_s,
+                                         klass=s.klass, slo=s.slo))
+            i += 1
+        if not killed and i >= len(specs) // 2:
+            router.fabric.kill(0)              # mid-burst node loss
+            killed = True
+        if router.busy:
+            router.step()
+    ttft_int = [h.request.first_token_v - h.request.submitted_v
+                for h in handles if h.request.first_token_v > 0.0
+                and h.request.slo == "interactive"]
+    fs = router.fabric.stats()
+    return {"nodes": nodes, "killed_node": 0,
+            "ttft_p99_int_ms": _pct(ttft_int, 99) * 1e3,
+            "completed": sum(1 for h in handles if h.finished),
+            "requests": len(handles),
+            "rescued_shards": len(fs.get("rescues", [])),
+            "preemptions": router.stats().preemptions}
+
+
+# --------------------------------------------- B: preemption integrity
+
+
+def _bit_identity(cfg, *, max_new: int) -> dict:
+    """Fill both slots with long batch work, then land interactive
+    arrivals that force preemption; the preempted requests must resume
+    to byte-identical streams vs a no-policy control."""
+    prompts = [[3, 17, 42, 9], [5, 11, 7], [2, 8, 20, 13, 4], [6, 9]]
+
+    def drive(pol):
+        rt = EngramRuntime(cfg, pool="CXL", max_batch=2, max_len=64,
+                           prompt_bucket=8,
+                           emulate_step_s=EMULATED_STEP_S, slo_policy=pol)
+        hs = [rt.submit(prompts[0], max_new, slo="batch"),
+              rt.submit(prompts[1], max_new, slo="batch")]
+        for _ in range(3):
+            rt.step()
+        hs += [rt.submit(prompts[2], 6, slo="interactive"),
+               rt.submit(prompts[3], 6, slo="interactive")]
+        rt.drain()
+        return rt, hs
+
+    rt0, h0 = drive(None)
+    pol = OverloadPolicy(spill_pool_bytes=8 << 20, spill_page_tokens=4)
+    rt1, h1 = drive(pol)
+    st = rt1.stats
+    link = rt1.engine._pool_link()
+    link_kv = link.bytes_by_class.get("kv", 0) if link is not None else 0
+    store_kv = rt1.engine.store.stats().class_bytes.get("kv", 0)
+    return {
+        "preemptions": st.preemptions, "resumes": st.resumes,
+        "kv_spill_bytes": st.kv_spill_bytes,
+        "kv_restore_bytes": st.kv_restore_bytes,
+        "kv_spill_pages": st.kv_spill_pages,
+        "link_kv_bytes": link_kv, "store_kv_bytes": store_kv,
+        "streams_identical": all(a.request.out == b.request.out
+                                 for a, b in zip(h0, h1)),
+    }
+
+
+# ------------------------------------------- C: KV/Engram arbitration
+
+
+def _arbiter_drive(cfg, arbiter, *, rounds: int, max_new: int) -> dict:
+    """Warm the hot-row cache on a small prompt pool, then churn
+    preemptions while re-serving the same pool: each spill's landed KV
+    pages press on the cache. Without an arbiter the landing is uncapped
+    (and the link booking monolithic); with one, occupancy is capped at
+    ``kv_cache_share`` and transfers are page-granular."""
+    pol = OverloadPolicy(spill_pool_bytes=32 << 20, spill_page_tokens=4)
+    rt = EngramRuntime(cfg, pool="CXL", max_batch=2, max_len=64,
+                       prompt_bucket=8, emulate_step_s=EMULATED_STEP_S,
+                       slo_policy=pol, arbiter=arbiter)
+    pool_prompts = [[3, 17, 42, 9], [5, 11, 7, 23]]
+    for p in pool_prompts:                        # warm the hot rows
+        rt.submit(list(p), max_new, slo="batch")
+    rt.drain()
+    rt.engine.store.reset_stats()
+    for _ in range(rounds):
+        for p in pool_prompts:                    # same rows, warm again
+            rt.submit(list(p), max_new, slo="batch")
+        for _ in range(3):
+            rt.step()
+        rt.submit([2, 8, 20, 13], 4, slo="interactive")  # forces preempt
+        rt.drain()
+    ss = rt.engine.store.stats()
+    return {
+        "arbiter": arbiter is not None,
+        "kv_cache_share": arbiter.kv_cache_share if arbiter else None,
+        "hit_rate": ss.hit_rate,
+        "hits": ss.hits, "misses": ss.misses,
+        "preemptions": rt.stats.preemptions,
+        "kv_class_bytes": ss.class_bytes.get("kv", 0),
+        "engram_class_bytes": ss.class_bytes.get("engram", 0),
+    }
+
+
+# ------------------------------------------------------------- driver
+
+
+def run(fast: bool = False, kill_nodes: int = 0) -> dict:
+    cfg = _tiny_cfg()
+    requests = 24 if fast else 64
+    max_new = 8
+    rounds = 3 if fast else 6
+
+    control = _burst_drive(cfg, policy=False, requests=requests,
+                           max_new=max_new)
+    policy = _burst_drive(cfg, policy=True, requests=requests,
+                          max_new=max_new)
+    for r in (control, policy):
+        emit(f"overload/burst/{'policy' if r['policy'] else 'control'}",
+             r["ttft_p99_int_ms"],
+             f"slo_int={r['slo_int']:.2f} slo_batch={r['slo_batch']:.2f} "
+             f"shed={r['shed']} deferred={r['deferred']} "
+             f"preempt={r['preemptions']}/{r['resumes']} "
+             f"spill={r['kv_spill_bytes']}B")
+    write_csv("overload_burst", list(control.keys()),
+              [list(control.values()), list(policy.values())])
+
+    ident = _bit_identity(cfg, max_new=20)
+    emit("overload/bit_identity", float(ident["streams_identical"]),
+         f"preempt={ident['preemptions']} resume={ident['resumes']} "
+         f"spill={ident['kv_spill_bytes']}B "
+         f"link_kv={ident['link_kv_bytes']}B "
+         f"store_kv={ident['store_kv_bytes']}B")
+
+    # 512 rows hold the pool prompts' ~176-row working set with slack;
+    # one ~16 KB spill is ~1000 row-equivalents (segment_bytes = 16), so
+    # an uncapped landing wipes the cache while the arbiter's cap spares it
+    cache_cfg = _tiny_cfg(cache_rows=512)
+    no_arb = _arbiter_drive(cache_cfg, None, rounds=rounds,
+                            max_new=max_new)
+    with_arb = _arbiter_drive(cache_cfg,
+                              PoolArbiter(kv_cache_share=0.0,
+                                          paged_link=True),
+                              rounds=rounds, max_new=max_new)
+    for r in (no_arb, with_arb):
+        emit(f"overload/arbiter/{'on' if r['arbiter'] else 'off'}",
+             r["hit_rate"],
+             f"hits={r['hits']} misses={r['misses']} "
+             f"preempt={r['preemptions']} "
+             f"kv={r['kv_class_bytes']}B")
+
+    fabric = None
+    if kill_nodes:
+        fabric = _kill_drive(cfg, requests=requests, max_new=max_new,
+                             nodes=kill_nodes)
+        emit("overload/fabric_kill", fabric["ttft_p99_int_ms"],
+             f"completed={fabric['completed']}/{fabric['requests']} "
+             f"rescued_shards={fabric['rescued_shards']}")
+
+    checks = {
+        # the policy keeps interactive p99 TTFT inside the SLO under a
+        # >= 2x-saturation burst; the identical-arrivals control cannot
+        "policy_meets_slo": bool(
+            policy["ttft_p99_int_ms"] <= SLO_TTFT_S * 1e3),
+        "control_violates_slo": bool(
+            control["ttft_p99_int_ms"] > SLO_TTFT_S * 1e3),
+        # the policy run actually exercised the machinery it is credited
+        # for (no vacuous pass: preemptions happened, spill round-tripped)
+        "policy_levers_used": bool(
+            policy["preemptions"] > 0
+            and policy["resumes"] == policy["preemptions"]
+            and policy["kv_restore_bytes"] == policy["kv_spill_bytes"]),
+        # preempt -> spill -> restore -> resume is bit-exact and metered
+        "preempt_bit_identical": bool(
+            ident["streams_identical"] and ident["preemptions"] >= 2),
+        "spill_charged_on_link": bool(
+            ident["link_kv_bytes"] > 0
+            and ident["store_kv_bytes"] == ident["kv_spill_bytes"]
+            + ident["kv_restore_bytes"]),
+        # KV cache pressure degrades the Engram hit rate; the arbiter
+        # restores it (same traffic, same preemption churn)
+        "arbiter_rescues_hit_rate": bool(
+            no_arb["hit_rate"] < with_arb["hit_rate"]
+            and no_arb["preemptions"] > 0
+            and with_arb["preemptions"] > 0),
+    }
+    out = {
+        "emulate_step_s": EMULATED_STEP_S,
+        "slo_ttft_s": SLO_TTFT_S,
+        "overload_x": OVERLOAD_X,
+        "burst": {"control": control, "policy": policy},
+        "bit_identity": ident,
+        "arbiter": {"off": no_arb, "on": with_arb},
+        "fabric_kill": fabric,
+        "checks": checks,
+    }
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    with open(OUT_DIR / "BENCH_overload.json", "w") as f:
+        json.dump(out, f, indent=2)
+    for name, ok in checks.items():
+        emit(f"overload/check/{name}", 0.0 if ok else 1.0,
+             "PASS" if ok else "FAIL")
+    if not all(checks.values()):
+        raise SystemExit(f"bench_overload checks failed: "
+                         f"{[k for k, v in checks.items() if not v]}")
+    return out
+
+
+if __name__ == "__main__":
+    kn = 0
+    if "--kill" in sys.argv:
+        kn = int(sys.argv[sys.argv.index("--kill") + 1])
+    run(fast="--fast" in sys.argv, kill_nodes=kn)

@@ -19,6 +19,7 @@ BENCHES = [
     ("scalability", "Table 3: DP x nnode scaling"),
     ("speculation", "§3.2 deep lookahead: acceptance x tier speculation"),
     ("load", "Offered-load TTFT/latency percentiles vs QPS x tier"),
+    ("overload", "SLO admission + preemption w/ KV spill under bursts"),
     ("fabric", "Sharded pool fabric: shard sweep + failure drills"),
     ("prefill", "Chunked prefill + fleet prefix KV cache: gaps + FLOPs"),
     ("hotpath", "Single-sync wave hot path: waves/s + d->h transfer budget"),

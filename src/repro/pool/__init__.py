@@ -13,4 +13,5 @@ from .store import (CachedStore, EngramStore, LocalStore, PrefetchHandle,
                     store_for_strategy)
 from .cache import (FrequencySketch, LRUHotRowCache, SharedCache,
                     SharedCacheStats, TinyLFUAdmission, zipf_keys)
+from .kvpool import KVPagePool, KVPoolStats, PoolArbiter, kv_page_keys
 from .scheduler import PrefetchScheduler, SpecWaveReport, WaveReport

@@ -165,6 +165,26 @@ class LRUHotRowCache:
         self.waves += 1
         return WaveAccess(hits=hits, misses=misses)
 
+    def occupy(self, keys) -> int:
+        """Insert ``keys`` for capacity pressure WITHOUT hit/miss
+        accounting (the KV-page landing path, pool/kvpool.py): landed KV
+        pages compete with Engram rows for cache capacity — evicting hot
+        rows — but are not Engram traffic, so counting them as hits or
+        misses would corrupt the hit-rate metric the eviction pressure is
+        measured *through*. Evictions are counted (they are real).
+        Returns the number of rows evicted."""
+        uniq = np.unique(np.asarray(keys, dtype=np.int64))
+        rows = self._rows
+        evicted = 0
+        for k in uniq.tolist():
+            rows[k] = None
+            rows.move_to_end(k)
+            if len(rows) > self.capacity_rows:
+                rows.popitem(last=False)
+                self.evictions += 1
+                evicted += 1
+        return evicted
+
     @property
     def hit_rate(self) -> float:
         n = self.total_hits + self.total_misses
@@ -226,6 +246,11 @@ class _SharedCacheView:
         self.total_misses += wave.misses
         self.waves += 1
         return wave
+
+    def occupy(self, keys) -> int:
+        """Capacity-pressure insert (no hit/miss accounting) — forwarded
+        to the shared LRU: one replica's KV landing evicts fleet-wide."""
+        return self.shared.cache.occupy(keys)
 
     @property
     def hit_rate(self) -> float:

@@ -159,6 +159,12 @@ class StoreStats:
     # of keys the *surviving* slots actually fetched).
     slot_accepted: dict = dataclasses.field(default_factory=dict)
     slot_wasted: dict = dataclasses.field(default_factory=dict)
+    # ---- per-traffic-class pool occupancy (KV pages vs Engram rows) -----
+    # bytes / link busy-seconds this store put on the shared medium, split
+    # by class ("engram": row fetches; "kv": preemption spills/restores,
+    # pool/kvpool.py) — the arbitration observable of ROADMAP item 1
+    class_bytes: dict = dataclasses.field(default_factory=dict)
+    class_busy_s: dict = dataclasses.field(default_factory=dict)
 
     @property
     def hit_rate(self) -> float:
@@ -279,14 +285,25 @@ class _StoreBase:
         wait, resv = self._reserve(hits + misses)
         return lat + wait, wait, resv
 
+    def note_class(self, klass: str, nbytes: int, busy_s: float) -> None:
+        """Attribute ``nbytes`` / ``busy_s`` of shared-medium occupancy to
+        a traffic class (per-class split in ``StoreStats``). The engram
+        charge path calls this on every reservation; the engine calls it
+        for KV spill/restore transfers it books directly on the pool link
+        (negative values roll back a refunded booking)."""
+        s = self._stats
+        s.class_bytes[klass] = s.class_bytes.get(klass, 0) + int(nbytes)
+        s.class_busy_s[klass] = s.class_busy_s.get(klass, 0.0) + busy_s
+
     def _reserve(self, n_segments: int) -> tuple[float, list]:
         link = getattr(self, "_link", None)
         if link is None or self.cursor is None or n_segments <= 0:
             return 0.0, []
-        wait, tr = link.reserve(self.cursor.now_s,
-                                self.occupancy_s(n_segments),
-                                nbytes=n_segments * segment_bytes(self.ecfg),
-                                wave=self.cursor.wave_tag())
+        occ = self.occupancy_s(n_segments)
+        nbytes = n_segments * segment_bytes(self.ecfg)
+        wait, tr = link.reserve(self.cursor.now_s, occ, nbytes=nbytes,
+                                wave=self.cursor.wave_tag(), klass="engram")
+        self.note_class("engram", nbytes, occ)
         return wait, [tr]
 
     def reserve_prefetch(self, n_segments: int):
@@ -453,9 +470,11 @@ class CachedStore(_StoreBase):
             t_miss = self.backing.latency_for_segments(misses)
             if (misses and self.cursor is not None
                     and getattr(self.backing, "_link", None) is not None):
+                occ = self.backing.occupancy_s(misses)
                 w_miss, tr = self.backing._link.reserve(
-                    self.cursor.now_s, self.backing.occupancy_s(misses),
-                    nbytes=misses * seg, wave=self.cursor.wave_tag())
+                    self.cursor.now_s, occ, nbytes=misses * seg,
+                    wave=self.cursor.wave_tag(), klass="engram")
+                self.note_class("engram", misses * seg, occ)
                 resv.append(tr)
             miss_path = t_miss + w_miss
         if hits and self.cursor is not None and self._cache_link is not None:

@@ -1,5 +1,6 @@
 from .clock import Cursor, Link, Transfer, VirtualClock
 from .engine import Engine, EngineStats, Request
+from .slo import DEFAULT_SLOS, OverloadPolicy, SLOSpec
 from .slots import select_slots, update_slots
 from .runtime import EngramRuntime, RequestHandle, TokenEvent
 from .router import POLICIES, Router, RouterStats

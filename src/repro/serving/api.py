@@ -11,12 +11,13 @@ mid-flight, the way real traffic meets a pool.
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+from typing import Optional, Union
 
 from ..pool.cache import PrefixKVCache
 from .engine import EngineStats
 from .router import Router
 from .runtime import EngramRuntime
+from .slo import DEFAULT_SLOS, OverloadPolicy
 from .workload import Workload
 
 
@@ -26,6 +27,7 @@ class ServeResult:
     frontend: Union[EngramRuntime, Router]
     handles: list                      # per request, submission order
     stats: EngineStats                 # aggregate over replicas
+    slo_policy: Optional[OverloadPolicy] = None   # the run's policy
 
     @property
     def router(self) -> Router:
@@ -45,17 +47,41 @@ class ServeResult:
         store = self.frontend.store
         return store.stats() if store is not None else None
 
-    def ttft_v(self) -> list:
+    def ttft_v(self, klass: Optional[str] = None) -> list:
         """Per-request virtual TTFT (offered-load arrival -> first token
-        on the fleet clock), submission order, admitted requests only."""
+        on the fleet clock), submission order, admitted requests only.
+        ``klass`` filters to one SLO class (serving/slo.py) — the
+        per-class percentile bench_overload's attainment gate reads."""
         return [h.request.first_token_v - h.request.submitted_v
-                for h in self.handles if h.request.first_token_v > 0.0]
+                for h in self.handles if h.request.first_token_v > 0.0
+                and (klass is None or h.request.slo == klass)]
 
-    def latency_v(self) -> list:
+    def latency_v(self, klass: Optional[str] = None) -> list:
         """Per-request virtual end-to-end latency (arrival -> last
-        token), completed requests only."""
+        token), completed requests only; ``klass`` filters to one SLO
+        class."""
         return [h.request.done_v - h.request.submitted_v
-                for h in self.handles if h.finished]
+                for h in self.handles if h.finished
+                and (klass is None or h.request.slo == klass)]
+
+    def slo_attainment(self, klass: str,
+                       ttft_s: Optional[float] = None) -> float:
+        """Fraction of the class's SUBMITTED requests whose virtual TTFT
+        met the target — shed and never-admitted requests count as misses
+        (an SLO refused is an SLO not met; attainment over admitted
+        requests only would reward shedding). ``ttft_s`` defaults to the
+        run's policy spec (or the DEFAULT_SLOS table). Division-safe:
+        a class with no requests reports 0.0."""
+        reqs = [h.request for h in self.handles if h.request.slo == klass]
+        if not reqs:
+            return 0.0
+        if ttft_s is None:
+            spec = self.slo_policy.spec(klass) \
+                if self.slo_policy is not None else DEFAULT_SLOS.get(klass)
+            ttft_s = spec.ttft_s if spec is not None else 0.0
+        met = sum(1 for r in reqs if r.first_token_v > 0.0
+                  and r.first_token_v - r.submitted_v <= ttft_s)
+        return met / len(reqs)
 
     def intertoken_gaps_v(self) -> list:
         """Per-request virtual inter-token gaps (consecutive emission-
@@ -100,24 +126,35 @@ def serve(cfg, workload: Workload, *, pool=None, replicas: int = 1,
     shares ONE fabric (the Router intercepts it as a named parameter); a
     single replica builds its own. ``result.frontend.fabric`` (router)
     or ``result.frontend.engine.fabric`` exposes it for failure drills.
+
+    ``slo_policy`` / ``arbiter`` (engine_kwargs, intercepted here): the
+    overload-survival stack (serving/slo.py, pool/kvpool.py) — SLO-class
+    admission control (router), priority dispatch + preemption with KV
+    spill (engine), KV-vs-Engram link/cache arbitration. Workload specs'
+    ``slo`` tags ride into every submitted request, and the result's
+    ``ttft_v(klass)`` / ``slo_attainment(klass)`` read the outcome.
     """
     specs = workload.build(cfg.vocab_size)
     prefix_cache_bytes = int(engine_kwargs.pop("prefix_cache_bytes", 0))
     shared_prefix_cache = bool(engine_kwargs.pop("shared_prefix_cache",
                                                  True))
+    slo_policy = engine_kwargs.pop("slo_policy", None)
+    arbiter = engine_kwargs.pop("arbiter", None)
     if replicas > 1:
         frontend: Union[EngramRuntime, Router] = Router(
             cfg, replicas=replicas, pool=pool, policy=policy,
             shared_cache=shared_cache,
             prefix_cache_bytes=prefix_cache_bytes,
-            shared_prefix_cache=shared_prefix_cache, **engine_kwargs)
+            shared_prefix_cache=shared_prefix_cache,
+            slo_policy=slo_policy, arbiter=arbiter, **engine_kwargs)
     else:
         if prefix_cache_bytes > 0:
             chunk = engine_kwargs.get("prefill_chunk")
             assert chunk, "prefix_cache_bytes needs prefill_chunk"
             engine_kwargs["prefix_cache"] = PrefixKVCache(
                 prefix_cache_bytes, chunk)
-        frontend = EngramRuntime(cfg, pool=pool, **engine_kwargs)
+        frontend = EngramRuntime(cfg, pool=pool, slo_policy=slo_policy,
+                                 arbiter=arbiter, **engine_kwargs)
     if warmup:
         for eng in _engines(frontend):
             eng.warmup()
@@ -138,7 +175,8 @@ def serve(cfg, workload: Workload, *, pool=None, replicas: int = 1,
             handles.append(frontend.submit(list(specs[i].prompt),
                                            specs[i].max_new,
                                            arrival_s=specs[i].arrival_s,
-                                           klass=specs[i].klass))
+                                           klass=specs[i].klass,
+                                           slo=specs[i].slo))
             i += 1
         if frontend.busy:
             frontend.step()
@@ -147,4 +185,5 @@ def serve(cfg, workload: Workload, *, pool=None, replicas: int = 1,
         stats = frontend.stats().aggregate
     else:
         stats = frontend.stats
-    return ServeResult(frontend=frontend, handles=handles, stats=stats)
+    return ServeResult(frontend=frontend, handles=handles, stats=stats,
+                       slo_policy=slo_policy)

@@ -73,6 +73,7 @@ class Transfer:
     nbytes: int = 0
     wave: object = None
     refunded: bool = False
+    klass: Optional[str] = None      # traffic class ("engram" | "kv" | ...)
 
     @property
     def end_s(self) -> float:
@@ -151,6 +152,11 @@ class Link:
         self.wait_s = 0.0
         self.contended = 0            # reservations that had to queue
         self.bytes_total = 0
+        # per-traffic-class occupancy (KV pages vs Engram rows sharing one
+        # medium — the arbitration observable); untagged bookings are not
+        # classed, so legacy ledgers are byte-identical
+        self.bytes_by_class: dict = {}
+        self.busy_s_by_class: dict = {}
         self.refunds = 0
         self.refunded_s = 0.0
         self._last_wave: object = None
@@ -183,8 +189,11 @@ class Link:
         return max(0.0, t - service_s)
 
     def reserve(self, now_s: float, service_s: float, nbytes: int = 0,
-                wave: object = None) -> tuple[float, Transfer]:
-        """Book ``service_s`` of occupancy; -> (queue wait, transfer)."""
+                wave: object = None, klass: Optional[str] = None
+                ) -> tuple[float, Transfer]:
+        """Book ``service_s`` of occupancy; -> (queue wait, transfer).
+        ``klass`` (optional) attributes the booking to a traffic class in
+        the per-class ledgers (``bytes_by_class``/``busy_s_by_class``)."""
         service_s = max(0.0, float(service_s))
         now = float(now_s)
         if wave is not None and wave == self._last_wave:
@@ -218,12 +227,17 @@ class Link:
             self.free_at_s = start + service_s
             self._flows.append([owner, start, self.free_at_s])
         tr = Transfer(link=self, start_s=start, service_s=service_s,
-                      nbytes=int(nbytes), wave=wave)
+                      nbytes=int(nbytes), wave=wave, klass=klass)
         self.reservations += 1
         self.busy_s += service_s
         self.wait_s += wait
         self.contended += int(wait > 0.0)
         self.bytes_total += int(nbytes)
+        if klass is not None:
+            self.bytes_by_class[klass] = \
+                self.bytes_by_class.get(klass, 0) + int(nbytes)
+            self.busy_s_by_class[klass] = \
+                self.busy_s_by_class.get(klass, 0.0) + service_s
         return wait, tr
 
     def refund(self, tr: Transfer) -> bool:
@@ -243,6 +257,11 @@ class Link:
             self.free_at_s = tr.start_s
             self.busy_s -= tr.service_s
             self.bytes_total -= tr.nbytes
+            if tr.klass is not None:
+                self.bytes_by_class[tr.klass] = \
+                    self.bytes_by_class.get(tr.klass, 0) - tr.nbytes
+                self.busy_s_by_class[tr.klass] = \
+                    self.busy_s_by_class.get(tr.klass, 0.0) - tr.service_s
             self._last_wave = None                  # start point is gone
             for i in range(len(self._flows) - 1, -1, -1):
                 if self._flows[i][2] == tr.end_s:   # shrink the tail flow
@@ -255,10 +274,14 @@ class Link:
         return True
 
     def stats(self) -> dict:
-        return {"name": self.name, "reservations": self.reservations,
-                "busy_s": self.busy_s, "wait_s": self.wait_s,
-                "contended": self.contended, "bytes": self.bytes_total,
-                "refunds": self.refunds, "refunded_s": self.refunded_s}
+        out = {"name": self.name, "reservations": self.reservations,
+               "busy_s": self.busy_s, "wait_s": self.wait_s,
+               "contended": self.contended, "bytes": self.bytes_total,
+               "refunds": self.refunds, "refunded_s": self.refunded_s}
+        if self.bytes_by_class:
+            out["bytes_by_class"] = dict(self.bytes_by_class)
+            out["busy_s_by_class"] = dict(self.busy_s_by_class)
+        return out
 
 
 class VirtualClock:

@@ -95,10 +95,12 @@ from ..models.model import (build_chunk_prefill, build_decode_step,
                             build_prefill_step, init_decode_state,
                             init_params)
 from ..models.transformer import RunFlags
+from ..pool.kvpool import KVPagePool, PoolArbiter
 from ..pool.scheduler import PrefetchScheduler
-from ..pool.store import TableFetcher, make_store
+from ..pool.store import TableFetcher, make_store, segment_bytes
 from ..pool.tiers import TIERS
 from .clock import VirtualClock
+from .slo import OverloadPolicy
 from .slots import (extract_prefix, gate_state, restore_prefix,
                     select_slots, update_slots)
 
@@ -112,8 +114,11 @@ class Request:
     submitted_s: float = 0.0
     first_token_s: float = 0.0
     done_s: float = 0.0
-    status: str = "queued"           # queued | running | done | cancelled
+    status: str = "queued"     # queued | running | preempted | done |
+    #                            cancelled | deferred | shed
     klass: str = "uniform"           # workload traffic class (zipf|uniform)
+    slo: str = "batch"               # SLO class (serving/slo.py)
+    preemptions: int = 0             # times this request was preempted
     # virtual-clock lifecycle stamps (serving/clock.py): deterministic
     # TTFT/latency under offered load, independent of host wall time
     submitted_v: float = 0.0
@@ -145,6 +150,27 @@ class _PrefillJob:
     chain: list = dataclasses.field(default_factory=list)  # block chain keys
     resv: list = dataclasses.field(default_factory=list)   # queued bookings
     started: bool = False
+
+
+@dataclasses.dataclass
+class _SpilledReq:
+    """One preempted request's engine-side record (the KV snapshot itself
+    is parked in the ``KVPagePool``). Lifecycle: ``phase="spilled"`` — the
+    request holds no slot, its spill's write-behind link bookings sit
+    outstanding in ``resv`` (refunded LIFO on cancel); a restore claims a
+    free slot (``phase="restoring"``, fetch booked into ``resv``) and the
+    NEXT admission wave completes it — refund-and-re-price at the wave's
+    timeline position, scatter the restored state in, go live (the
+    ``_PrefillJob`` restore doctrine)."""
+    req: Request
+    nbytes: int                      # snapshot bytes (the spill transfer)
+    pages: tuple                     # kv_page_keys over the decoded stream
+    n_tokens: int                    # KV positions the snapshot carries
+    last_token: int                  # next decode input (tokens[] mirror)
+    snapshot: object = None          # extract_prefix host tree
+    slot: int = -1                   # claimed slot (phase "restoring")
+    phase: str = "spilled"           # spilled | restoring
+    resv: list = dataclasses.field(default_factory=list)   # queued bookings
 
 
 def _rate(num: float, den: float) -> float:
@@ -188,6 +214,12 @@ class EngineStats:
     prefill_tokens_restored: int = 0 # prompt tokens restored from the cache
     prefix_lookup_blocks: int = 0    # whole prompt blocks eligible for reuse
     prefix_hit_blocks: int = 0       # blocks served by the prefix cache
+    # --- preemption + KV spill (slo.py / pool/kvpool.py) ------------------
+    preemptions: int = 0             # running slots preempted under pressure
+    resumes: int = 0                 # preempted requests restored + resumed
+    kv_spill_bytes: int = 0          # KV bytes paged out to the pool tier
+    kv_restore_bytes: int = 0        # KV bytes fetched back on resume
+    kv_spill_pages: int = 0          # fixed-size pages spilled
 
     @property
     def tokens_per_s(self) -> float:
@@ -290,7 +322,10 @@ class Engine:
                  rid_start: int = 0, clock: Optional[VirtualClock] = None,
                  prefill_chunk: Optional[int] = None, prefix_cache=None,
                  emu_prefill_scaled: bool = False,
-                 fabric=None, fabric_nodes: Optional[int] = None):
+                 fabric=None, fabric_nodes: Optional[int] = None,
+                 slo_policy: Optional[OverloadPolicy] = None,
+                 kv_pool: Optional[KVPagePool] = None,
+                 arbiter: Optional[PoolArbiter] = None):
         """``emulate_step_s``: evaluate the pool stalls at a production
         operating point (ms-scale decode steps) instead of this host's
         CPU step times — stalls are then accounted in ``emu_time_s``
@@ -333,7 +368,19 @@ class Engine:
         ``fabric`` / ``fabric_nodes``: back the pool with a sharded
         ``pool/fabric.PoolFabric`` — pass a built fabric (the router
         shares ONE across replicas) or a node count for a lone engine to
-        build its own on its clock. Needs a pooled tier."""
+        build its own on its clock. Needs a pooled tier.
+
+        ``slo_policy``: an ``OverloadPolicy`` (serving/slo.py) — admission
+        runs priority-first / deadline-ordered over the SLO classes, and
+        (``policy.preempt``) a queued higher-priority request may preempt
+        a strictly-lower-priority running slot: its KV is extracted
+        (slots.extract_prefix), paged into ``kv_pool`` (a ``KVPagePool``;
+        the router passes ONE shared pool per fleet, a lone engine builds
+        its own from the policy's budget), the spill booked on the pool
+        link, and the request restored-and-resumed later bit-identically.
+        ``arbiter``: a ``PoolArbiter`` metering that KV traffic against
+        Engram rows on the shared link + hot-row cache. ``None`` (default)
+        keeps every legacy admission path bit-exact."""
         assert not cfg.is_encoder, "serving needs a decoder"
         self.cfg = cfg
         self.name = name
@@ -493,21 +540,37 @@ class Engine:
         # single-sync and the clock link reservation its prefetch booked
         self._pipelined: dict[int, tuple] = {}
 
+        # --- overload policy: SLO admission + preemption (serving/slo.py)
+        self.slo_policy = slo_policy
+        self.arbiter = arbiter
+        self.kv_pool = kv_pool
+        if slo_policy is not None and slo_policy.preempt:
+            assert self.spec is None, \
+                "preemption does not compose with speculative decoding " \
+                "(a preempted slot's pipelined drafts have no rollback)"
+            if self.kv_pool is None:
+                self.kv_pool = KVPagePool(slo_policy.spill_pool_bytes,
+                                          slo_policy.spill_page_tokens)
+        # rid -> _SpilledReq: preempted requests parked in the KV pool
+        self._spilled: dict[int, _SpilledReq] = {}
+
     # ------------------------------------------------------------ public API
 
     def submit(self, prompt: list, max_new: int = 16,
                arrival_s: Optional[float] = None,
-               klass: str = "uniform") -> int:
+               klass: str = "uniform", slo: str = "batch") -> int:
         """Queue a request. ``arrival_s``: its arrival time on the fleet's
         virtual clock (offered-load workloads); an idle replica fast-
         forwards to it, a busy one queues the request from that instant —
-        the difference is measured queueing delay in the virtual TTFT."""
+        the difference is measured queueing delay in the virtual TTFT.
+        ``slo``: the request's SLO class (serving/slo.py) — drives
+        priority admission and preemption under an ``OverloadPolicy``."""
         self._rid += 1
         if arrival_s is not None:
             self.cursor.advance_to(arrival_s)
         req = Request(self._rid, list(prompt), max_new,
                       submitted_s=time.perf_counter(),
-                      klass=klass or "uniform",
+                      klass=klass or "uniform", slo=slo or "batch",
                       submitted_v=arrival_s if arrival_s is not None
                       else self.cursor.now_s)
         self.queue.append(req)
@@ -517,6 +580,7 @@ class Engine:
     def busy(self) -> bool:
         """Anything queued or mid-flight?"""
         return (bool(self.queue) or bool(self._prefill_jobs)
+                or bool(self._spilled)
                 or any(s is not None for s in self.slots))
 
     def runtime(self) -> "EngramRuntime":
@@ -565,6 +629,21 @@ class Engine:
                     self.proposer.end(slot)
                 self._mark_cancelled(req)
                 return True
+        entry = self._spilled.get(rid)
+        if entry is not None:
+            # cancel mid-spill (phase "spilled": refund the write-behind
+            # spill bookings) or mid-restore (phase "restoring": refund
+            # the in-flight fetch AND release the claimed slot) — either
+            # way NEWEST-FIRST, the Link.refund tail-rollback doctrine
+            for tr in entry.resv[::-1]:
+                self.clock.refund(tr)
+            entry.resv.clear()
+            if entry.phase == "restoring":
+                self._free.append(entry.slot)
+            self.kv_pool.free(rid)
+            del self._spilled[rid]
+            self._mark_cancelled(entry.req)
+            return True
         return False
 
     def _drop_pipelined(self, slot: int) -> None:
@@ -658,11 +737,20 @@ class Engine:
         if self.prefill_chunk is not None:
             return self._admit_chunked()
         events = []
-        if not (self._free and self.queue):
-            return events
         fills = []
-        while self._free and self.queue:
-            fills.append((self._free.popleft(), self.queue.popleft()))
+        if self.slo_policy is not None:
+            # SLO admission: restores complete + preemption may free slots
+            # even when the queue is empty, so this runs unconditionally
+            for req in self._overload_admit():
+                self.queue.remove(req)
+                fills.append((self._free.popleft(), req))
+            if not fills:
+                return events
+        else:
+            if not (self._free and self.queue):
+                return events
+            while self._free and self.queue:
+                fills.append((self._free.popleft(), self.queue.popleft()))
         groups: dict[int, list] = {}
         for slot, req in fills:
             S = _bucket(len(req.prompt), self.prompt_bucket)
@@ -764,33 +852,41 @@ class Engine:
 
         Wave primitive: returns no events — a job's first token is
         emitted by the chunk wave that finishes its prompt."""
-        C = self.prefill_chunk
+        if self.slo_policy is not None:
+            for req in self._overload_admit():
+                self.queue.remove(req)
+                self._claim_job(req, self._free.popleft())
+            return []
         while self._free and self.queue:
-            req = self.queue.popleft()
-            slot = self._free.popleft()
-            job = _PrefillJob(req=req, slot=slot)
-            if self.prefix_cache is not None:
-                job.chain = prefix_chain_keys(req.prompt, C)
-                # restorable depth is capped so >= 1 prompt token remains
-                # to compute: snapshots carry KV state, not the logits
-                # that sample the request's first token
-                usable = job.chain[:(len(req.prompt) - 1) // C]
-                self.stats.prefix_lookup_blocks += len(usable)
-                if usable:
-                    n_hit, snap, nbytes = self.prefix_cache.lookup(usable)
-                    if n_hit:
-                        job.restore = snap
-                        job.restore_tokens = n_hit * C
-                        job.restore_bytes = int(nbytes)
-                        job.pos = n_hit * C
-                        self.stats.prefix_hit_blocks += n_hit
-                        self.stats.prefill_tokens_restored += n_hit * C
-                        tr = self._reserve_bytes(nbytes)
-                        if tr is not None:
-                            job.resv.append(tr)
-            req.status = "running"
-            self._prefill_jobs[slot] = job
+            self._claim_job(self.queue.popleft(), self._free.popleft())
         return []
+
+    def _claim_job(self, req: Request, slot: int) -> None:
+        """Claim one free slot as a ``_PrefillJob`` (with the prefix-cache
+        lookup + restorable-depth booking when configured)."""
+        C = self.prefill_chunk
+        job = _PrefillJob(req=req, slot=slot)
+        if self.prefix_cache is not None:
+            job.chain = prefix_chain_keys(req.prompt, C)
+            # restorable depth is capped so >= 1 prompt token remains
+            # to compute: snapshots carry KV state, not the logits
+            # that sample the request's first token
+            usable = job.chain[:(len(req.prompt) - 1) // C]
+            self.stats.prefix_lookup_blocks += len(usable)
+            if usable:
+                n_hit, snap, nbytes = self.prefix_cache.lookup(usable)
+                if n_hit:
+                    job.restore = snap
+                    job.restore_tokens = n_hit * C
+                    job.restore_bytes = int(nbytes)
+                    job.pos = n_hit * C
+                    self.stats.prefix_hit_blocks += n_hit
+                    self.stats.prefill_tokens_restored += n_hit * C
+                    tr = self._reserve_bytes(nbytes)
+                    if tr is not None:
+                        job.resv.append(tr)
+        req.status = "running"
+        self._prefill_jobs[slot] = job
 
     def _start_job(self, job: _PrefillJob) -> None:
         """Lazy first-wave start: scatter a fresh batch-1 state — or the
@@ -1342,6 +1438,240 @@ class Engine:
                 self.proposer.end(slot)
             return True
         return False
+
+    # ------------------------------------- preemption + KV spill (slo.py)
+
+    def preempt(self, slot: int) -> bool:
+        """Preempt a RUNNING slot: extract its KV prefix at the decoded
+        position (``slots.extract_prefix``), page the snapshot into the
+        KV pool (``pool/kvpool.py``), book the spill write-behind on the
+        pool link (the bookings sit outstanding in the entry, refunded
+        LIFO by a mid-spill ``cancel``), and free the slot for higher-
+        priority work. Returns False — and leaves the victim running —
+        when the pool refuses the spill at capacity (backpressure: a
+        preemption that cannot park its KV does not happen)."""
+        req = self.slots[slot]
+        if (req is None or req.status != "running"
+                or self.kv_pool is None or not req.out):
+            return False
+        # KV-valid length: len(prompt) positions from prefill plus one per
+        # decode wave EXCEPT the newest sampled token (out[-1]), which is
+        # the next wave's input — it has no KV row yet
+        pos = len(req.prompt) + len(req.out) - 1
+        with jax.transfer_guard_device_to_host("allow"):
+            snap, nbytes = extract_prefix(self.state, slot, pos)
+        self.stats.d2h_pulls += 1          # the spill's host snapshot
+        stream = (req.prompt + req.out)[:pos]
+        pages = self.kv_pool.spill(req.rid, stream, snap, pos, int(nbytes))
+        if pages is None:
+            return False
+        entry = _SpilledReq(req=req, nbytes=int(nbytes), pages=pages,
+                            n_tokens=pos, last_token=int(req.out[-1]),
+                            snapshot=snap)
+        entry.resv = self._book_kv(entry.nbytes, len(pages), req.rid)
+        self._occupy_kv_cache(entry.nbytes, pages)
+        self._note_kv(entry.nbytes)
+        self.slots[slot] = None
+        self._free.append(slot)
+        self._drop_pipelined(slot)
+        if self.proposer is not None:
+            self.proposer.end(slot)
+        req.status = "preempted"
+        req.preemptions += 1
+        self._spilled[req.rid] = entry
+        self.stats.preemptions += 1
+        self.stats.kv_spill_bytes += entry.nbytes
+        self.stats.kv_spill_pages += len(pages)
+        return True
+
+    def _book_kv(self, nbytes: int, n_pages: int, rid: int) -> list:
+        """Book one KV spill/restore transfer on the pool link. With a
+        page-granular arbiter each page is its own reservation under the
+        shared ``"kv"`` flow owner — the link's processor-sharing wait
+        lets concurrent Engram waves fair-share past the spill. Without
+        one the transfer is a single monolithic UNTAGGED booking (serial
+        FIFO: every Engram wave behind it eats the full horizon) — the
+        no-arbiter control bench_overload measures against. Returns the
+        transfers (refundable LIFO); [] when clock-unbound."""
+        link = self._pool_link()
+        if link is None or not nbytes or not link.bandwidth_Bps:
+            return []
+        resv = []
+        if self.arbiter is not None and self.arbiter.paged_link and n_pages:
+            base, rem = divmod(int(nbytes), n_pages)
+            for p in range(n_pages):
+                nb = base + (rem if p == n_pages - 1 else 0)
+                if nb <= 0:
+                    continue
+                _, tr = link.reserve(self.cursor.now_s,
+                                     float(nb) / link.bandwidth_Bps,
+                                     nbytes=nb, wave=("kv", rid, p),
+                                     klass="kv")
+                resv.append(tr)
+        else:
+            _, tr = link.reserve(self.cursor.now_s,
+                                 float(nbytes) / link.bandwidth_Bps,
+                                 nbytes=int(nbytes), klass="kv")
+            resv.append(tr)
+        return resv
+
+    def _note_kv(self, nbytes: int) -> None:
+        """Charge one logical KV transfer (spill, or COMPLETED restore) to
+        the store's per-class occupancy ledger (StoreStats.class_bytes) —
+        claim-time pre-bookings are link-side only, so
+        ``class_bytes["kv"] == kv_spill_bytes + kv_restore_bytes``."""
+        note = getattr(self.store, "note_class", None)
+        if note is None:
+            return
+        link = self._pool_link()
+        busy = (float(nbytes) / link.bandwidth_Bps
+                if link is not None and link.bandwidth_Bps else 0.0)
+        note("kv", int(nbytes), busy)
+
+    def _occupy_kv_cache(self, nbytes: int, pages: tuple) -> None:
+        """Model landed KV pages pressuring the DRAM front (hot-row
+        cache): an uncapped landing (no arbiter) occupies up to the full
+        row capacity, evicting hot Engram rows — the hit-rate degradation
+        bench_overload scenario C measures; the arbiter caps it at
+        ``kv_cache_share``. Synthetic keys carry bit 62 so they can never
+        collide with real packed segment keys."""
+        cache = getattr(self.store, "cache", None)
+        if cache is None or not hasattr(cache, "occupy") or not pages:
+            return
+        rows = max(1, int(nbytes) // max(1, segment_bytes(self.cfg.engram)))
+        cap = int(getattr(cache, "capacity_rows", 0))
+        if self.arbiter is not None:
+            rows = self.arbiter.cache_occupancy_rows(rows, cap)
+        else:
+            rows = min(rows, cap)
+        if rows <= 0:
+            return
+        base = (int(pages[0]) & 0x3FFFFFFF) << 30
+        keys = (np.arange(rows, dtype=np.int64) + base) | np.int64(1 << 62)
+        cache.occupy(keys)
+
+    def _overload_admit(self) -> list:
+        """SLO admission (``OverloadPolicy``): complete last wave's
+        restores, preempt strictly-lower-priority running slots for the
+        high-priority queue head, then fill the free slots priority-first
+        / deadline-ordered from the union of spilled (resume) and queued
+        candidates — a resume outranks a same-priority fresh admit (it
+        holds pooled capacity and has already paid its prefill). Returns
+        the queued requests to admit this wave (still in ``self.queue``;
+        the caller removes them and claims slots)."""
+        pol = self.slo_policy
+        self._complete_restores()
+        if pol.preempt and self.kv_pool is not None:
+            self._preempt_for_queue()
+        cands = []
+        for req in self.queue:
+            cands.append((-pol.priority(req.slo), 1, pol.deadline_v(req),
+                          req.rid, req))
+        for e in self._spilled.values():
+            if e.phase == "spilled":
+                cands.append((-pol.priority(e.req.slo), 0,
+                              pol.deadline_v(e.req), e.req.rid, e))
+        cands.sort(key=lambda c: c[:4])
+        chosen = []
+        budget = len(self._free)
+        for c in cands:
+            if budget <= 0:
+                break
+            if isinstance(c[4], _SpilledReq):
+                self._begin_restore(c[4], self._free.popleft())
+            else:
+                chosen.append(c[4])
+            budget -= 1
+        return chosen
+
+    def _preempt_for_queue(self) -> None:
+        """Free slots for queued requests that strictly outrank a running
+        victim. Victim choice: lowest priority first, most remaining
+        decode work first (near-done requests are spared — their restore
+        would cost more than letting them finish). A freed slot is
+        earmarked for the queued request that forced it, so the spare
+        budget is unchanged by a successful preemption."""
+        pol = self.slo_policy
+        waiting = sorted(self.queue,
+                         key=lambda r: (-pol.priority(r.slo),
+                                        pol.deadline_v(r), r.rid))
+        spare = len(self._free)
+        for req in waiting:
+            if spare > 0:
+                spare -= 1
+                continue
+            prio = pol.priority(req.slo)
+            victim, vkey = -1, None
+            for slot, run in enumerate(self.slots):
+                if run is None or run.status != "running":
+                    continue
+                vprio = pol.priority(run.slo)
+                if vprio >= prio:
+                    continue
+                key = (vprio, -(run.max_new - len(run.out)), slot)
+                if vkey is None or key < vkey:
+                    victim, vkey = slot, key
+            if victim < 0 or not self.preempt(victim):
+                break               # no eligible victim / pool refused
+
+    def _begin_restore(self, entry: _SpilledReq, slot: int) -> None:
+        """Phase 1 of the two-phase resume: claim the free slot and book
+        the KV fetch. The spill's write-behind bookings are committed here
+        (the KV is durably pooled; only the fetch remains refundable —
+        a mid-restore ``cancel`` returns it and the slot). The NEXT
+        admission wave completes the resume (``_complete_restores``) —
+        the ``_PrefillJob`` restore doctrine."""
+        entry.slot = slot
+        entry.phase = "restoring"
+        entry.resv = self._book_kv(entry.nbytes, len(entry.pages),
+                                   entry.req.rid)
+
+    def _complete_restores(self) -> None:
+        """Phase 2: for each slot claimed last wave, refund the claim-time
+        fetch NEWEST-FIRST and re-price it at this wave's timeline
+        position (``Link.refund`` rolls back only the tail — the
+        ``_propose_block`` doctrine), stall to the transfer's completion
+        (the snapshot must be on device before the slot decodes), scatter
+        the restored state in, and resume decode: per-row greedy decode
+        is independent of batch composition, so the resumed token stream
+        is bit-identical to the never-preempted one."""
+        entries = [e for e in self._spilled.values()
+                   if e.phase == "restoring"]
+        if not entries:
+            return
+        entries.sort(key=lambda e: e.req.rid)
+        for entry in entries[::-1]:
+            for tr in entry.resv[::-1]:
+                self.clock.refund(tr)
+            entry.resv.clear()
+        for entry in entries:
+            resv = self._book_kv(entry.nbytes, len(entry.pages),
+                                 entry.req.rid)
+            end = max((tr.end_s for tr in resv), default=self.cursor.now_s)
+            if end > self.cursor.now_s:
+                stall = end - self.cursor.now_s
+                self.stats.stall_s += stall
+                if self.emulate_step_s is not None:
+                    self.stats.emu_time_s += stall
+                self.cursor.advance(stall)
+            req = entry.req
+            sub = restore_prefix(entry.snapshot, self.max_len)
+            self.state = self._insert(self.state, sub,
+                                      jnp.asarray([entry.slot], jnp.int32))
+            self.tokens = self.tokens.at[entry.slot].set(
+                jnp.int32(entry.last_token))
+            self._tokens_host[entry.slot] = entry.last_token
+            self.slots[entry.slot] = req
+            req.status = "running"
+            if self.proposer is not None:
+                self.proposer.begin(entry.slot, req.prompt + req.out)
+            self._note_kv(entry.nbytes)
+            self.kv_pool.free(req.rid, restored=True)
+            del self._spilled[req.rid]
+            self.stats.resumes += 1
+            self.stats.kv_restore_bytes += entry.nbytes
+        # prefetched decode keys predate the restored slots going live
+        self._next_keys = None
 
     # ------------------------------------------------------- pool emulation
 

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
+from collections import deque
 from typing import Optional
 
 import numpy as np
@@ -33,11 +34,13 @@ from ..core.hashing import engram_indices
 from ..models.model import init_params
 from ..pool.cache import (PrefixCacheStats, PrefixKVCache, SharedCache,
                           SharedCacheStats, TinyLFUAdmission)
+from ..pool.kvpool import KVPagePool, KVPoolStats, PoolArbiter
 from ..pool.store import make_store, segment_keys
 from ..pool.tiers import TIERS
 from .clock import VirtualClock
-from .engine import Engine, EngineStats
+from .engine import Engine, EngineStats, Request
 from .runtime import EngramRuntime, RequestHandle, TokenEvent
+from .slo import OverloadPolicy
 
 POLICIES = ("round_robin", "least_loaded", "cache_affinity")
 
@@ -53,10 +56,25 @@ class RouterStats:
     clock: Optional[dict] = None        # VirtualClock.stats() snapshot
     prefix_cache: Optional[PrefixCacheStats] = None   # fleet prefix KV
     fabric: Optional[dict] = None       # PoolFabric.stats() snapshot
+    # --- overload policy (serving/slo.py) --------------------------------
+    shed: int = 0                       # requests refused at admission
+    deferred: int = 0                   # requests back-pressured (backlog)
+    shed_by_class: dict = dataclasses.field(default_factory=dict)
+    kv_pool: Optional[KVPoolStats] = None   # shared KV spill pool snapshot
 
     @property
     def cache_hit_rate(self) -> float:
         return self.cache.hit_rate if self.cache is not None else 0.0
+
+    @property
+    def preemptions(self) -> int:
+        """Fleet preemptions (merged across replicas by the aggregate)."""
+        return self.aggregate.preemptions
+
+    @property
+    def resumes(self) -> int:
+        """Fleet restore-and-resumes (merged across replicas)."""
+        return self.aggregate.resumes
 
     @property
     def acceptance_rate(self) -> float:
@@ -94,6 +112,61 @@ class RouterStats:
         }
 
 
+class _AdmissionHandle:
+    """Handle for a request the admission controller held at the router:
+    ``deferred`` (parked in the class backlog; once its class queue drains
+    below cap the router dispatches it and this handle proxies the real
+    ``RequestHandle``) or ``shed`` (dropped outright — a terminal state,
+    no tokens ever arrive). Mirrors the ``RequestHandle`` surface readers
+    consume (``request`` / ``rid`` / ``status`` / ``finished`` /
+    ``tokens`` / ``cancel``), so `serve()`'s handle list stays uniform
+    across admission outcomes. The placeholder ``Request`` carries a
+    NEGATIVE rid — it never collides with the replicas' rid ranges."""
+
+    def __init__(self, router: "Router", request: Request):
+        self.router = router
+        self.request = request
+        self.inner: Optional[RequestHandle] = None
+
+    def _bind(self, inner: RequestHandle) -> None:
+        """The backlog dispatched the request: adopt the real engine-side
+        Request (tokens, stamps, status all flow from it)."""
+        self.inner = inner
+        self.request = inner.request
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def status(self) -> str:
+        return self.request.status
+
+    @property
+    def finished(self) -> bool:
+        return self.inner is not None and self.inner.finished
+
+    @property
+    def cancelled(self) -> bool:
+        return self.request.status == "cancelled"
+
+    @property
+    def tokens(self) -> list:
+        return list(self.request.out)
+
+    def cancel(self) -> bool:
+        if self.inner is not None:
+            return self.inner.cancel()
+        dq = self.router._backlog.get(self.request.slo)
+        if dq is not None:
+            for item in dq:
+                if item[0] is self:
+                    dq.remove(item)
+                    self.request.status = "cancelled"
+                    return True
+        return False
+
+
 class Router:
     def __init__(self, cfg, *, replicas: int = 2, pool: Optional[str] = None,
                  policy: str = "round_robin", shared_cache: bool = True,
@@ -102,7 +175,9 @@ class Router:
                  redispatch_skew: int = 2,
                  prefix_cache_bytes: int = 0,
                  shared_prefix_cache: bool = True,
-                 fabric_nodes: Optional[int] = None, **engine_kwargs):
+                 fabric_nodes: Optional[int] = None,
+                 slo_policy: Optional[OverloadPolicy] = None,
+                 arbiter: Optional[PoolArbiter] = None, **engine_kwargs):
         """``shared_cache``: mount one `SharedCache` across all replicas
         (needs ``pool`` and ``cfg.engram.store.cache_rows > 0``); False
         keeps the per-replica private caches `make_store` would build —
@@ -131,11 +206,33 @@ class Router:
         switch-port links, and a mid-serving ``router.fabric.kill(n)``
         degrades every replica at once (the failure drill). A named
         router parameter, not an engine kwarg: forwarding it would build
-        M nodes *per replica*."""
+        M nodes *per replica*.
+
+        ``slo_policy``: an ``OverloadPolicy`` (serving/slo.py). The router
+        runs its ADMISSION side — bounded per-class queues with shed /
+        back-pressure (``submit`` may return an ``_AdmissionHandle``) and
+        a backlog drained as class queues empty — and threads the policy
+        into every replica for priority dispatch + preemption, with ONE
+        fleet-shared ``KVPagePool`` (preempted KV parks in the pooled
+        tier, which is shared infrastructure, not per-replica DRAM).
+        ``arbiter``: the KV-vs-Engram ``PoolArbiter``, also fleet-wide."""
         assert replicas >= 1, replicas
         assert policy in POLICIES, (policy, POLICIES)
         self.cfg = cfg
         self.policy = policy
+        self.slo_policy = slo_policy
+        self.arbiter = arbiter
+        self.kv_pool: Optional[KVPagePool] = None
+        if slo_policy is not None and slo_policy.preempt:
+            self.kv_pool = KVPagePool(slo_policy.spill_pool_bytes,
+                                      slo_policy.spill_page_tokens)
+        # per-class deferred backlog: (handle, prompt, max_new, arrival_s,
+        # klass) tuples, drained FIFO by step() as class queues empty
+        self._backlog: dict[str, deque] = {}
+        self.shed = 0
+        self.deferred = 0
+        self.shed_by_class: dict[str, int] = {}
+        self._held_rid = 0              # negative rids for held requests
         self.redispatch = (policy == "least_loaded") if redispatch is None \
             else bool(redispatch)
         self.redispatch_skew = max(1, int(redispatch_skew))
@@ -196,7 +293,9 @@ class Router:
             eng = Engine(cfg, params=params, pool=pool, seed=seed,
                          store=store, name=name, rid_start=r * 1_000_000,
                          clock=self.clock, prefix_cache=pfx,
-                         fabric=self.fabric, **engine_kwargs)
+                         fabric=self.fabric, slo_policy=slo_policy,
+                         kv_pool=self.kv_pool, arbiter=arbiter,
+                         **engine_kwargs)
             self.replicas.append(eng.runtime())
         self._rr = 0
 
@@ -204,7 +303,17 @@ class Router:
 
     def _load(self, rt: EngramRuntime) -> int:
         eng = rt.engine
-        return len(eng.queue) + sum(s is not None for s in eng.slots)
+        # spilled requests count: a preempted/restoring request still owns
+        # pooled capacity and will reclaim a slot on this replica
+        return (len(eng.queue) + len(eng._spilled)
+                + sum(s is not None for s in eng.slots))
+
+    def _queued_class(self, slo: str) -> int:
+        """Fleet-wide queued-but-unadmitted depth of one SLO class (the
+        admission cap's observable; the backlog is NOT counted — it is
+        the overflow the cap protects the queues from)."""
+        return sum(1 for rt in self.replicas
+                   for r in rt.engine.queue if r.slo == slo)
 
     def _affinity_hash(self, prompt) -> int:
         """Stable segment-key hash of the prompt: identical (and
@@ -237,14 +346,56 @@ class Router:
     # ------------------------------------------------------------ lifecycle
 
     def submit(self, prompt, max_new: int = 16,
-               arrival_s=None, klass: str = "uniform") -> RequestHandle:
-        rt = self.replicas[self.select_replica(prompt)]
+               arrival_s=None, klass: str = "uniform", slo: str = "batch"):
+        """Route one request. Under an ``OverloadPolicy`` with a queue cap,
+        an over-cap arrival is held at the router: deferred classes park in
+        the backlog (arrival stamp preserved — the deferral is measured
+        queueing in their TTFT), the rest are shed. Held requests return an
+        ``_AdmissionHandle`` instead of a ``RequestHandle``."""
         if arrival_s is None:
             # a router-dispatched request arrives at the fleet's current
             # decision point: an idle (lagging) target cursor fast-forwards
             # to it instead of booking link transfers in its virtual past
             arrival_s = self.now_s
-        return rt.submit(prompt, max_new, arrival_s=arrival_s, klass=klass)
+        pol = self.slo_policy
+        if pol is not None:
+            cap = pol.cap(slo)
+            if cap and self._queued_class(slo) >= cap:
+                self._held_rid -= 1
+                req = Request(self._held_rid, list(prompt), max_new,
+                              klass=klass or "uniform", slo=slo or "batch",
+                              submitted_v=float(arrival_s))
+                h = _AdmissionHandle(self, req)
+                if pol.defers(slo):
+                    req.status = "deferred"
+                    self._backlog.setdefault(slo, deque()).append(
+                        (h, list(prompt), max_new, float(arrival_s), klass))
+                    self.deferred += 1
+                else:
+                    req.status = "shed"
+                    self.shed += 1
+                    self.shed_by_class[slo] = \
+                        self.shed_by_class.get(slo, 0) + 1
+                return h
+        return self._dispatch(prompt, max_new, arrival_s, klass, slo)
+
+    def _dispatch(self, prompt, max_new, arrival_s, klass,
+                  slo) -> RequestHandle:
+        rt = self.replicas[self.select_replica(prompt)]
+        return rt.submit(prompt, max_new, arrival_s=arrival_s, klass=klass,
+                         slo=slo)
+
+    def _drain_backlog(self) -> None:
+        """Dispatch deferred requests whose class queue dropped below cap
+        (FIFO within a class; the ORIGINAL arrival stamp rides along, so
+        the backlog wait lands in the request's measured TTFT)."""
+        pol = self.slo_policy
+        for slo, dq in self._backlog.items():
+            cap = pol.cap(slo)
+            while dq and (not cap or self._queued_class(slo) < cap):
+                h, prompt, max_new, arrival_s, klass = dq.popleft()
+                h._bind(self._dispatch(prompt, max_new, arrival_s, klass,
+                                       slo))
 
     @property
     def now_s(self) -> float:
@@ -266,8 +417,12 @@ class Router:
         exceeds ``redispatch_skew`` — dispatch-time balance decays as
         completion times diverge mid-flight, and a queued request carries
         no replica state yet, so moving it is free. Newest queued requests
-        move first (FIFO order on the donor is preserved). Returns the
-        number of migrations performed."""
+        move first (FIFO order on the donor is preserved). Only requests
+        whose status is still ``"queued"`` are movable: a preempted or
+        mid-spill request's KV pages live in the pool under its ORIGIN
+        replica's bookings and slot claim — migrating it would strand
+        them (and `_load` already charges the donor for it via
+        ``_spilled``). Returns the number of migrations performed."""
         moved = 0
         while True:
             loads = [self._load(rt) for rt in self.replicas]
@@ -275,7 +430,7 @@ class Router:
             # (a slot-saturated replica with an empty queue has nothing
             # movable, but another backlogged replica may)
             donors = [i for i, rt in enumerate(self.replicas)
-                      if rt.engine.queue]
+                      if any(r.status == "queued" for r in rt.engine.queue)]
             if not donors:
                 return moved
             src = max(donors, key=lambda i: loads[i])
@@ -283,7 +438,9 @@ class Router:
             if loads[src] - loads[dst] < self.redispatch_skew:
                 return moved
             rt_src, rt_dst = self.replicas[src], self.replicas[dst]
-            req = rt_src.engine.queue.pop()          # newest queued
+            req = next(r for r in reversed(rt_src.engine.queue)
+                       if r.status == "queued")     # newest movable
+            rt_src.engine.queue.remove(req)
             h = rt_src.handles.pop(req.rid, None)
             # the move happens at the later of the two cursors — a
             # migration cannot deliver work into a replica's past
@@ -297,7 +454,10 @@ class Router:
 
     def step(self) -> list[TokenEvent]:
         """One serving wave on every busy replica (lockstep DP emulation),
-        preceded by a re-dispatch pass when enabled."""
+        preceded by a backlog-drain pass (deferred admissions whose class
+        queue has room) and a re-dispatch pass when enabled."""
+        if self.slo_policy is not None and any(self._backlog.values()):
+            self._drain_backlog()
         if self.redispatch and len(self.replicas) > 1:
             self.rebalance()
         events: list[TokenEvent] = []
@@ -316,7 +476,8 @@ class Router:
 
     @property
     def busy(self) -> bool:
-        return any(rt.busy for rt in self.replicas)
+        return (any(rt.busy for rt in self.replicas)
+                or any(self._backlog.values()))
 
     # ----------------------------------------------------------------- stats
 
@@ -334,7 +495,11 @@ class Router:
                            migrations=self.migrations,
                            clock=self.clock.stats(), prefix_cache=pfx,
                            fabric=self.fabric.stats()
-                           if self.fabric is not None else None)
+                           if self.fabric is not None else None,
+                           shed=self.shed, deferred=self.deferred,
+                           shed_by_class=dict(self.shed_by_class),
+                           kv_pool=self.kv_pool.stats()
+                           if self.kv_pool is not None else None)
 
     def store_stats(self) -> dict:
         """Per-replica `StoreStats` (each replica charges its own waves)."""

@@ -138,18 +138,22 @@ class EngramRuntime:
     # ----------------------------------------------------------- lifecycle
 
     def submit(self, prompt, max_new: int = 16,
-               arrival_s=None, klass: str = "uniform") -> RequestHandle:
+               arrival_s=None, klass: str = "uniform",
+               slo: str = "batch") -> RequestHandle:
         """Queue a request; returns its lifecycle handle. Accepts a token
         list or a pre-built `Request` (rid is (re)assigned either way).
-        ``arrival_s``/``klass``: virtual arrival time and workload class
-        (serving/clock.py, serving/workload.py)."""
+        ``arrival_s``/``klass``/``slo``: virtual arrival time, workload
+        class, and SLO class (serving/clock.py, serving/workload.py,
+        serving/slo.py)."""
         if isinstance(prompt, Request):
             rid = self.engine.submit(prompt.prompt, prompt.max_new,
                                      arrival_s=arrival_s,
-                                     klass=getattr(prompt, "klass", klass))
+                                     klass=getattr(prompt, "klass", klass),
+                                     slo=getattr(prompt, "slo", slo))
         else:
             rid = self.engine.submit(list(prompt), max_new,
-                                     arrival_s=arrival_s, klass=klass)
+                                     arrival_s=arrival_s, klass=klass,
+                                     slo=slo)
         req = self.engine.queue[-1]
         assert req.rid == rid
         h = RequestHandle(self, req)

@@ -11,7 +11,14 @@ hope, not a property. A `Workload` pins it down:
     admission happens *under load*), or `"poisson"` (an offered-load
     arrival process at `qps` requests per *virtual* second on the fleet's
     `VirtualClock` — the regime where TTFT/p99 curves plot against
-    utilization, serving/clock.py);
+    utilization, serving/clock.py), `"mmpp"` (two-state Markov-modulated
+    Poisson: calm `qps` punctuated by `burst_factor`x bursts with
+    exponential dwells — the overload drill's arrival shape), or
+    `"trace"` (replay explicit arrival seconds — recorded traffic);
+  * SLO class mix — `interactive_fraction` tags that fraction of requests
+    `slo="interactive"` (the rest `"batch"`), the classes an
+    `OverloadPolicy` (serving/slo.py) prioritizes, sheds, and preempts
+    for;
   * prompt-pool reuse — `prompt_pool=N` draws prompts from N hot prompts
     (repeat traffic: the hot-row cache's and the n-gram proposer's
     steady state); `prompts=(...)` pins explicit token lists;
@@ -61,6 +68,37 @@ class RequestSpec:
     arrival_step: int            # serving step at which the request arrives
     arrival_s: Optional[float] = None   # virtual arrival time (poisson)
     klass: str = "uniform"       # traffic class: uniform | zipf
+    slo: str = "batch"           # SLO class: interactive | batch (slo.py)
+
+
+def _mmpp_arrivals(n: int, qps: float, burst_factor: float, calm_s: float,
+                   burst_s: float, seed: int) -> np.ndarray:
+    """Two-state MMPP arrival times: a Poisson process whose rate is
+    modulated by a two-state Markov chain — ``qps`` in the calm state,
+    ``qps * burst_factor`` in the burst state, with exponential dwell
+    times (mean ``calm_s`` / ``burst_s``). One sequential stream from one
+    crc-seeded RNG, so the arrival times are bit-identical across
+    processes and independent of replica count. The partial gap discarded
+    at each state flip is exact thinning: exponential inter-arrivals are
+    memoryless, so restarting the draw at the flip preserves the
+    piecewise-Poisson law."""
+    rng = np.random.RandomState(_crc_seed(seed, 5))
+    out = np.empty(n, np.float64)
+    t, i = 0.0, 0
+    burst = False
+    switch = t + rng.exponential(calm_s)
+    while i < n:
+        gap = rng.exponential(
+            1.0 / (qps * (burst_factor if burst else 1.0)))
+        if t + gap < switch:
+            t += gap
+            out[i] = t
+            i += 1
+        else:
+            t = switch
+            burst = not burst
+            switch = t + rng.exponential(burst_s if burst else calm_s)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,17 +113,39 @@ class Workload:
     prefix_pool: int = 0         # shared prompt prefixes (0 = none)
     prefix_len: int = 0          # tokens per shared prefix
     prefix_zipf_alpha: float = 0.0  # prefix-id skew (0 = round-robin)
-    arrival: str = "batch"       # batch | paced | poisson
+    arrival: str = "batch"       # batch | paced | poisson | mmpp | trace
     arrival_every: int = 1       # paced: one new request every N steps
-    qps: float = 0.0             # poisson: offered load (virtual req/s)
+    qps: float = 0.0             # poisson/mmpp: offered load (virtual req/s)
+    # mmpp (two-state Markov-modulated Poisson): calm rate = qps, burst
+    # rate = qps * burst_factor, exponential dwell times per state
+    burst_factor: float = 8.0
+    calm_s: float = 0.1          # mean calm-state dwell (virtual s)
+    burst_s: float = 0.02        # mean burst-state dwell (virtual s)
+    trace: tuple = ()            # trace arrivals: explicit virtual seconds
+    # SLO class mix: that fraction of requests is "interactive", the rest
+    # "batch" (serving/slo.py); 0.0 leaves every request batch-class
+    interactive_fraction: float = 0.0
     seed: int = 0
 
     def __post_init__(self):
-        assert self.arrival in ("batch", "paced", "poisson"), self.arrival
+        assert self.arrival in ("batch", "paced", "poisson", "mmpp",
+                                "trace"), self.arrival
         assert self.requests >= 0 and self.max_new >= 1
         assert 0.0 <= self.zipf_fraction <= 1.0, self.zipf_fraction
-        if self.arrival == "poisson":
-            assert self.qps > 0.0, "poisson arrivals need qps > 0"
+        assert 0.0 <= self.interactive_fraction <= 1.0, \
+            self.interactive_fraction
+        if self.arrival in ("poisson", "mmpp"):
+            assert self.qps > 0.0, f"{self.arrival} arrivals need qps > 0"
+        if self.arrival == "mmpp":
+            assert self.burst_factor >= 1.0, self.burst_factor
+            assert self.calm_s > 0.0 and self.burst_s > 0.0, \
+                (self.calm_s, self.burst_s)
+        if self.arrival == "trace":
+            assert len(self.trace) >= self.requests, \
+                (len(self.trace), self.requests)
+            ts = [float(t) for t in self.trace[:self.requests]]
+            assert all(b >= a for a, b in zip(ts, ts[1:])), \
+                "trace arrivals must be non-decreasing"
         if self.prefix_pool or self.prefix_len:
             assert self.prefix_pool > 0 and self.prefix_len > 0, \
                 (self.prefix_pool, self.prefix_len)
@@ -99,6 +159,12 @@ class Workload:
             gaps = np.random.RandomState(self.seed ^ 0x5EED).exponential(
                 1.0 / self.qps, size=self.requests)
             arrivals_s = np.cumsum(gaps)
+        elif self.arrival == "mmpp":
+            arrivals_s = _mmpp_arrivals(self.requests, self.qps,
+                                        self.burst_factor, self.calm_s,
+                                        self.burst_s, self.seed)
+        elif self.arrival == "trace":
+            arrivals_s = np.asarray(self.trace[:self.requests], np.float64)
         out = []
         for r in range(self.requests):
             pr = int(rng.randint(self.prompt_pool)) if self.prompt_pool else r
@@ -143,9 +209,18 @@ class Workload:
                 max_new += r % (self.max_new_jitter + 1)
             arrival = 0 if self.arrival != "paced" \
                 else r * max(1, self.arrival_every)
+            # SLO class by golden-ratio scatter on the REQUEST index (the
+            # prompt-class scatter above runs on the pool index pr): the
+            # mix is equidistributed over tiny workloads and independent
+            # of prompt reuse, and — being derived from r alone — the
+            # class labels are identical across processes/replica counts
+            interactive = self.interactive_fraction > 0.0 and \
+                (((r * 0x9E3779B9 + 0x7F4A7C15) & 0xFFFFFFFF) / 2**32
+                 < self.interactive_fraction)
             out.append(RequestSpec(
                 prompt=prompt, max_new=max_new, arrival_step=arrival,
                 arrival_s=float(arrivals_s[r]) if arrivals_s is not None
                 else None,
-                klass="zipf" if zipf else "uniform"))
+                klass="zipf" if zipf else "uniform",
+                slo="interactive" if interactive else "batch"))
         return out

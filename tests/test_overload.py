@@ -1,0 +1,340 @@
+"""Overload survival: SLO admission control, preemption with KV spill to
+the pooled tier, bursty arrivals, and KV-vs-Engram arbitration
+(serving/slo.py, pool/kvpool.py, engine preempt/restore path)."""
+import dataclasses
+import zlib
+
+import numpy as np
+import pytest
+
+from conftest import reduced
+
+from repro.core.hashing import prefix_chain_keys
+from repro.launch.serve import with_store
+from repro.models.model import init_params
+from repro.pool import KVPagePool, PoolArbiter, kv_page_keys
+from repro.pool.cache import LRUHotRowCache
+from repro.serving import (EngramRuntime, OverloadPolicy, Request, Router,
+                           SLOSpec, Workload, serve)
+
+
+def tiny_cfg(cache_rows: int = 0):
+    cfg = reduced("deepseek-7b")
+    cfg = dataclasses.replace(cfg, n_layers=3, layer_types=("attn",) * 3,
+                              attn_kinds=("global",) * 3,
+                              ffn_types=("dense",) * 3,
+                              engram=dataclasses.replace(cfg.engram,
+                                                         layers=(1,)))
+    return with_store(cfg, cache_rows=cache_rows) if cache_rows else cfg
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return tiny_cfg()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, 0)
+
+
+def _runtime(cfg, params, **kw):
+    kw.setdefault("pool", "CXL")
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("prompt_bucket", 8)
+    kw.setdefault("emulate_step_s", 2e-4)
+    return EngramRuntime(cfg, params=params, **kw)
+
+
+PROMPTS = [[3, 17, 42, 9], [5, 11, 7], [2, 8, 20, 13, 4], [6, 9]]
+
+
+# --------------------------------------------------------------- arrivals
+
+
+def test_mmpp_arrivals_pinned_checksum():
+    """MMPP arrival streams are process-deterministic (crc-seeded RNG, no
+    hash() salting): the byte-exact arrival times and SLO class labels
+    match checksums pinned in a previous process, and rebuilding the
+    workload — the path every replica count shares, since arrivals are
+    generated once in build() — is bit-identical."""
+    w = Workload(requests=32, max_new=4, arrival="mmpp", qps=2000.0,
+                 burst_factor=8.0, calm_s=0.05, burst_s=0.02,
+                 interactive_fraction=0.25, seed=7)
+    specs = w.build(64)
+    arr = np.asarray([s.arrival_s for s in specs], np.float64)
+    assert zlib.crc32(arr.tobytes()) == 0xCD2DD8F1
+    assert np.all(np.diff(arr) >= 0.0)
+    slos = "".join("i" if s.slo == "interactive" else "b" for s in specs)
+    assert zlib.crc32(slos.encode()) == 0x5AE6F56E
+    again = w.build(64)
+    assert [s.arrival_s for s in again] == [s.arrival_s for s in specs]
+    assert [s.slo for s in again] == [s.slo for s in specs]
+
+
+def test_trace_arrivals_pinned_checksum():
+    tr = tuple(0.001 * i for i in range(16))
+    w = Workload(requests=16, max_new=4, arrival="trace", trace=tr, seed=7)
+    arr = np.asarray([s.arrival_s for s in w.build(64)], np.float64)
+    assert zlib.crc32(arr.tobytes()) == 0x50FE0A48
+    with pytest.raises(AssertionError):
+        Workload(requests=4, arrival="trace", trace=(0.2, 0.1, 0.3, 0.4))
+    with pytest.raises(AssertionError):
+        Workload(requests=8, arrival="trace", trace=(0.1, 0.2))
+    with pytest.raises(AssertionError):
+        Workload(requests=4, arrival="mmpp")          # mmpp needs qps
+
+
+# --------------------------------------------------------------- KV pool
+
+
+def test_kv_page_keys_cover_every_token():
+    toks = list(range(1, 20))                         # 19 tokens, pages of 8
+    keys = kv_page_keys(toks, 8)
+    assert len(keys) == 3                             # 2 full + 1 tail
+    assert keys[:2] == tuple(prefix_chain_keys(toks, 8))
+    # tail key is chained through the last full page's digest: extending
+    # the stream changes ONLY the tail
+    keys2 = kv_page_keys(toks + [99], 8)
+    assert keys2[:2] == keys[:2] and keys2[2] != keys[2]
+    # sub-page stream still gets one (tail) key
+    assert len(kv_page_keys([1, 2, 3], 8)) == 1
+
+
+def test_kv_pool_refuses_at_capacity():
+    pool = KVPagePool(1000, page_tokens=4)
+    assert pool.spill(1, [1, 2, 3, 4, 5], "snapA", 5, 600) is not None
+    assert pool.spill(2, [6, 7], "snapB", 2, 600) is None   # would overflow
+    st = pool.stats()
+    assert st.refused == 1 and st.entries == 1 and st.bytes == 600
+    assert pool.free(1, restored=True)
+    assert pool.stats().bytes == 0 and pool.stats().restores == 1
+    assert pool.spill(2, [6, 7], "snapB", 2, 600) is not None
+
+
+def test_arbiter_caps_cache_occupancy():
+    cache = LRUHotRowCache(100)
+    cache.access_wave(np.arange(100, dtype=np.int64))  # fill with hot rows
+    assert len(cache) == 100
+    arb = PoolArbiter(kv_cache_share=0.1)
+    assert arb.cache_occupancy_rows(1000, 100) == 10
+    assert arb.cache_occupancy_rows(3, 100) == 3
+    hits0, misses0 = cache.total_hits, cache.total_misses
+    evicted = cache.occupy((np.arange(10, dtype=np.int64) + 7) << 33)
+    assert evicted == 10                               # capped landing
+    # occupancy pressure is NOT hit/miss accounting
+    assert cache.total_hits == hits0 and cache.total_misses == misses0
+
+
+# ---------------------------------------------------- preempt + resume
+
+
+def _fill_then_burst(rt):
+    """Two long batch requests saturate both slots; three waves later two
+    interactive requests arrive — under a preempting policy they must
+    evict the batch slots."""
+    hs = [rt.submit(PROMPTS[0], 20, slo="batch"),
+          rt.submit(PROMPTS[1], 20, slo="batch")]
+    for _ in range(3):
+        rt.step()
+    hs += [rt.submit(PROMPTS[2], 6, slo="interactive"),
+           rt.submit(PROMPTS[3], 6, slo="interactive")]
+    return hs
+
+
+def test_preempt_resume_bit_identical(cfg, params):
+    """The tentpole invariant: a preempted-then-resumed request's token
+    stream is bit-identical to the never-preempted control (per-row
+    greedy decode is independent of batch composition; the restore
+    re-enters the exact KV prefix and next input token)."""
+    rt0 = _runtime(cfg, params)
+    h0 = _fill_then_burst(rt0)
+    rt0.drain()
+
+    pol = OverloadPolicy(spill_pool_bytes=8 << 20, spill_page_tokens=4)
+    rt1 = _runtime(cfg, params, slo_policy=pol)
+    h1 = _fill_then_burst(rt1)
+    rt1.drain()
+
+    st = rt1.stats
+    assert st.preemptions == 2 and st.resumes == 2
+    assert st.kv_spill_bytes > 0
+    assert st.kv_restore_bytes == st.kv_spill_bytes
+    assert st.kv_spill_pages >= 2           # >= one page per preemption
+    preempted = [h.request for h in h1 if h.request.preemptions > 0]
+    assert len(preempted) == 2
+    for a, b in zip(h0, h1):
+        assert a.request.out == b.request.out
+    # spill + restore were charged on the pool link under the "kv" class
+    link = rt1.engine._pool_link()
+    assert link is not None and link.bytes_by_class["kv"] > 0
+    # store-side per-class occupancy: exactly the logical transfers
+    ss = rt1.engine.store.stats()
+    assert ss.class_bytes["kv"] == st.kv_spill_bytes + st.kv_restore_bytes
+    assert ss.class_bytes.get("engram", 0) > 0
+    # the pool drained: every spill was restored
+    kv = rt1.engine.kv_pool.stats()
+    assert kv.entries == 0 and kv.restores == 2
+
+
+def test_preempt_backpressure_pool_full(cfg, params):
+    """A preemption whose KV cannot park in the pool does not happen: the
+    victim keeps running (spill refused = backpressure, not data loss)."""
+    pol = OverloadPolicy(spill_pool_bytes=1024,        # far below one snap
+                         spill_page_tokens=4)
+    rt = _runtime(cfg, params, slo_policy=pol)
+    hs = _fill_then_burst(rt)
+    rt.drain()
+    st = rt.stats
+    assert st.preemptions == 0
+    assert rt.engine.kv_pool.stats().refused > 0
+    assert all(h.finished for h in hs)
+
+
+# ----------------------------------------------------- cancel mid-flight
+
+
+def test_cancel_during_spill_refunds_lifo(cfg, params):
+    """Cancelling a request parked mid-spill refunds its write-behind
+    page bookings newest-first (each tail rollback exposes the previous
+    booking as the new tail, so the WHOLE spill unwinds), releases the
+    pool entry, and leaves the engine drainable."""
+    pol = OverloadPolicy(spill_pool_bytes=8 << 20, spill_page_tokens=4)
+    arb = PoolArbiter(paged_link=True)
+    rt = _runtime(cfg, params, slo_policy=pol, arbiter=arb)
+    rt.submit(PROMPTS[0], 20, slo="batch")
+    rt.submit(PROMPTS[1], 20, slo="batch")
+    for _ in range(3):
+        rt.step()
+    eng = rt.engine
+    link = eng._pool_link()
+    kv_before = link.bytes_by_class.get("kv", 0)
+    assert eng.preempt(0)
+    (rid, entry), = eng._spilled.items()
+    assert entry.phase == "spilled" and len(entry.resv) > 1
+    spilled = link.bytes_by_class["kv"] - kv_before
+    assert spilled == entry.nbytes
+    refunded0 = eng.clock.refunded_bytes
+    assert rt.cancel(rid)
+    # LIFO unwind: every page booking rolled back, ledger balanced
+    assert eng.clock.refunded_bytes - refunded0 == entry.nbytes
+    assert link.bytes_by_class["kv"] == kv_before
+    assert rid not in eng.kv_pool and not eng._spilled
+    assert entry.req.status == "cancelled"
+    rt.drain()
+    assert not eng.busy
+
+
+def test_cancel_during_restore_refunds_and_frees_slot(cfg, params):
+    """Cancelling between restore phase 1 (slot claimed, fetch booked)
+    and phase 2 refunds the in-flight fetch LIFO AND returns the claimed
+    slot to the free list."""
+    pol = OverloadPolicy(spill_pool_bytes=8 << 20, spill_page_tokens=4)
+    rt = _runtime(cfg, params, slo_policy=pol,
+                  arbiter=PoolArbiter(paged_link=True))
+    rt.submit(PROMPTS[0], 20, slo="batch")
+    rt.submit(PROMPTS[1], 20, slo="batch")
+    for _ in range(3):
+        rt.step()
+    eng = rt.engine
+    assert eng.preempt(0)
+    (rid, entry), = eng._spilled.items()
+    # one admission pass claims the free slot and books the fetch
+    eng._admit()
+    assert entry.phase == "restoring" and entry.slot >= 0
+    assert entry.resv
+    fetch_bytes = sum(tr.nbytes for tr in entry.resv)
+    assert fetch_bytes == entry.nbytes
+    free_before = len(eng._free)
+    refunded0 = eng.clock.refunded_bytes
+    assert rt.cancel(rid)
+    assert eng.clock.refunded_bytes - refunded0 == entry.nbytes
+    assert len(eng._free) == free_before + 1
+    assert not eng._spilled and rid not in eng.kv_pool
+    rt.drain()
+    assert not eng.busy
+    # the cancelled request never resumed
+    assert eng.stats.resumes == 0 and eng.stats.preemptions == 1
+
+
+# ------------------------------------------------------ router admission
+
+
+def test_router_rebalance_skips_non_queued(cfg, params):
+    """Continuous re-dispatch migrates only requests whose status is
+    still "queued" — a preempted/mid-spill request parked in a donor's
+    queue (or any non-queued state) must stay on its origin replica,
+    whose pool holds its KV pages."""
+    router = Router(cfg, params=params, replicas=2, pool="CXL",
+                    policy="least_loaded", redispatch=False,
+                    redispatch_skew=1, max_batch=2, max_len=64,
+                    prompt_bucket=8, emulate_step_s=2e-4)
+    donor = router.replicas[0].engine
+    stuck = Request(900001, [1, 2, 3], 4)
+    stuck.status = "preempted"
+    donor.queue.append(stuck)
+    movable = [Request(900002 + i, [4, 5], 4) for i in range(3)]
+    donor.queue.extend(movable)
+    moved = router.rebalance()
+    assert moved > 0
+    assert stuck in donor.queue                       # never migrated
+    dst = router.replicas[1].engine
+    assert all(r.status == "queued" for r in dst.queue)
+    # drop the synthetic requests so the fixture-scoped fleet stays idle
+    donor.queue.clear()
+    dst.queue.clear()
+
+
+def test_router_admission_shed_and_defer(cfg, params):
+    """Over-cap arrivals: deferred classes back-pressure into the router
+    backlog (and later complete, their deferral measured in TTFT); shed
+    classes are refused terminally with per-class accounting."""
+    pol = OverloadPolicy(queue_cap=1, defer_classes=("batch",),
+                        preempt=False)
+    router = Router(cfg, params=params, replicas=1, pool="CXL",
+                    max_batch=2, max_len=64, prompt_bucket=8,
+                    emulate_step_s=2e-4, slo_policy=pol)
+    hs = []
+    for i in range(4):
+        hs.append(router.submit(PROMPTS[i % len(PROMPTS)], 4, slo="batch"))
+    for i in range(3):
+        hs.append(router.submit(PROMPTS[i], 4, slo="interactive"))
+    stats = router.stats()
+    assert stats.deferred >= 1                         # batch backlogged
+    assert stats.shed >= 1                             # interactive refused
+    assert stats.shed_by_class.get("interactive", 0) == stats.shed
+    shed = [h for h in hs if h.request.status == "shed"]
+    deferred = [h for h in hs if h.request.status == "deferred"]
+    assert shed and deferred
+    assert all(h.rid < 0 for h in shed + deferred)     # held at the router
+    router.drain()
+    # every deferred request was eventually dispatched and completed
+    assert all(h.finished and h.request.rid > 0 for h in deferred)
+    assert all(not h.tokens for h in shed)             # shed: no tokens ever
+    assert router.stats().shed == len(shed)
+
+
+def test_serve_per_class_results_and_attainment(cfg, params):
+    """ServeResult satellites: per-class ttft_v/latency_v partition the
+    global lists; slo_attainment is division-safe and counts shed
+    requests as misses."""
+    pol = OverloadPolicy(slos={"interactive": SLOSpec("interactive",
+                                                      ttft_s=5e-3,
+                                                      priority=10),
+                               "batch": SLOSpec("batch", ttft_s=1.0)},
+                         preempt=False)
+    w = Workload(requests=10, max_new=4, arrival="mmpp", qps=3000.0,
+                 burst_factor=6.0, calm_s=0.02, burst_s=0.01,
+                 interactive_fraction=0.4, seed=11)
+    res = serve(cfg, w, pool="CXL", replicas=1, params=params, max_batch=2,
+                max_len=64, prompt_bucket=8, emulate_step_s=2e-4,
+                slo_policy=pol)
+    assert len(res.ttft_v("interactive")) + len(res.ttft_v("batch")) \
+        == len(res.ttft_v())
+    assert len(res.latency_v("interactive")) + len(res.latency_v("batch")) \
+        == len(res.latency_v())
+    for klass in ("interactive", "batch"):
+        assert 0.0 <= res.slo_attainment(klass) <= 1.0
+    assert res.slo_attainment("no-such-class") == 0.0  # division-safe
+    assert res.slo_attainment("batch", ttft_s=1e9) == 1.0
