@@ -1,0 +1,335 @@
+"""Three-level tier chain benchmark: DRAM -> CXL -> SSD placement.
+
+The chain (pool/tierchain.py) extends the modelable Engram table past
+DRAM+CXL capacity by spilling the cold tail to flash, with batched
+scatter-gather cold reads and virtual-clock-aged TinyLFU placement. This
+bench measures what that buys and what it must not cost, on the virtual
+clock (fully deterministic):
+
+  * ``tiering_capacity.csv`` + stdout rows — TTFT percentiles for a
+    CXL-only pool holding the whole working set vs a ``"CXL+SSD"`` chain
+    whose DRAM+CXL capacity is ONE QUARTER of the measured distinct-key
+    universe (4x oversubscription), under Zipf(1.0) traffic.
+  * a mid-run hot-set shift drill at the store level: virtual-clock
+    sketch aging vs a never-forgetting control, windowed DRAM+CXL hit
+    rates before and after the shift.
+  * the placement solver (simulator.plan_placement) against the brute-
+    force grid sweep, and its predicted TTFT against a measured
+    ``serve()`` run at the chosen split.
+  * ``BENCH_tiering.json`` — rows, drills, and the pass/fail checks (the
+    CI ``tiering-smoke`` job uploads this artifact and the bench exits
+    nonzero on a violated check):
+      - ``chain_ttft_bounded``: at 4x oversubscription the chain's p99
+        TTFT stays within ``TOL_CHAIN_P99`` of the CXL-only baseline —
+        flash capacity is ~free when the hot set fits the warm tiers;
+      - ``aging_recovers``: after the hot-set shift the aged chain's
+        DRAM+CXL hit rate comes back within ``RECOVERY_GAP`` of its
+        pre-shift level, while the no-aging control's does not — the
+        frozen-sketch failure mode aging exists to break;
+      - ``solver_matches_sweep``: ``plan_placement``'s chosen split
+        equals the brute-force cost-x-TTFT optimum at every target of a
+        multi-point sweep;
+      - ``solver_predicts_measured``: the solver's predicted TTFT lands
+        within ``TTFT_PRED_TOL`` of the measured ``serve()`` TTFT at the
+        chosen split;
+      - ``replay_bit_identical``: engine-recorded chain traces — plain
+        and sharded over a 2-node fabric — replay through
+        ``simulator.replay_stall_s`` to the exact engine stall.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+
+import numpy as np
+
+from repro.configs.base import StoreConfig
+from repro.launch.train import reduced_config
+from repro.models.model import init_params
+from repro.pool.cache import zipf_keys
+from repro.pool.simulator import (placement_sweep, plan_placement,
+                                  predict_chain_ttft_s, replay_stall_s,
+                                  _best_plan)
+from repro.pool.store import make_store
+from repro.serving import Engine, Workload, serve
+from repro.serving.clock import VirtualClock
+
+from .common import OUT_DIR, emit, write_csv
+
+EMULATED_STEP_S = 2e-4       # production decode cadence
+TOL_CHAIN_P99 = 1.5          # chain p99 TTFT vs CXL-only baseline
+RECOVERY_GAP = 0.10          # aged post-shift hit rate vs pre-shift
+TTFT_PRED_TOL = 0.25         # solver model vs measured serve() TTFT
+OVERSUB = 4                  # universe / (DRAM+CXL capacity)
+
+
+def _tiny_cfg(scfg=None):
+    cfg = reduced_config("deepseek-7b")
+    e = dataclasses.replace(cfg.engram, layers=(1,),
+                            store=scfg if scfg is not None else StoreConfig())
+    return dataclasses.replace(cfg, n_layers=3, layer_types=("attn",) * 3,
+                               attn_kinds=("global",) * 3,
+                               ffn_types=("dense",) * 3, engram=e)
+
+
+def _pct(xs, q) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def _workload(requests, max_new, seed=0) -> Workload:
+    return Workload(requests=requests, max_new=max_new, arrival="poisson",
+                    qps=800.0, zipf_alpha=1.0,
+                    prompt_pool=max(2, requests // 4), seed=seed)
+
+
+def _serve_row(cfg, params, w, pool, label) -> dict:
+    res = serve(cfg, w, pool=pool, params=params, max_batch=4, max_len=64,
+                prompt_bucket=8, emulate_step_s=EMULATED_STEP_S)
+    ttft = res.ttft_v()
+    ss = res.store_stats()
+    return {
+        "pool": label, "requests": len(ttft),
+        "ttft_p50_us": _pct(ttft, 50) * 1e6,
+        "ttft_p99_us": _pct(ttft, 99) * 1e6,
+        "stall_ms": res.stats.stall_s * 1e3,
+        "hits": ss.hits, "misses": ss.misses,
+        "warm_hits": ss.warm_hits, "cold_misses": ss.cold_misses,
+        "promotions": ss.promotions, "demotions": ss.demotions,
+    }
+
+
+def _capacity_drill(params, *, requests, max_new) -> tuple[list, dict]:
+    """CXL-only (whole table warm) vs a chain at OVERSUB x capacity.
+
+    The distinct-key universe is measured first with an uncapped probe
+    chain (every key promotes while the warm partition has room), then
+    DRAM+CXL capacity is sized to ``universe // OVERSUB``."""
+    w = _workload(requests, max_new)
+    probe_cfg = _tiny_cfg(StoreConfig(cache_rows=0, warm_rows=1 << 22))
+    probe = serve(probe_cfg, w, pool="CXL+SSD",
+                  params=init_params(probe_cfg, 0), max_batch=4, max_len=64,
+                  prompt_bucket=8, emulate_step_s=EMULATED_STEP_S)
+    universe = len(probe.frontend.store._warm)
+    cap = max(8, universe // OVERSUB)
+    front = max(2, cap // 4)
+    scfg = StoreConfig(cache_rows=front, warm_rows=cap - front,
+                       aging_half_life_s=0.05)
+
+    base_cfg = _tiny_cfg()
+    base = _serve_row(base_cfg, params, w, "CXL", "CXL-only")
+    chain_cfg = _tiny_cfg(scfg)
+    chain = _serve_row(chain_cfg, init_params(chain_cfg, 0), w, "CXL+SSD",
+                       f"chain@1/{OVERSUB}")
+    meta = {"universe_rows": universe, "front_rows": front,
+            "warm_rows": cap - front,
+            "p99_ratio": chain["ttft_p99_us"]
+            / max(base["ttft_p99_us"], 1e-9)}
+    return [base, chain], meta
+
+
+def _hit_rate_trace(ecfg, scfg, *, waves, shift_at, perm, wave_keys,
+                    vocab, wave_gap_s) -> list:
+    """Drive one chain with a mid-run hot-set shift (rank permutation
+    ``perm`` applied to the key stream after ``shift_at``); per-wave
+    DRAM+CXL hit rate ``(front + warm) / uniques``."""
+    clock = VirtualClock()
+    cur = clock.cursor("aging")
+    st = make_store(ecfg, "CXL+SSD", store_cfg=scfg, clock=clock)
+    st.bind_cursor(cur)
+    rates = []
+    for i in range(waves):
+        cur.advance_to(i * wave_gap_s)
+        cur.next_wave()
+        keys = zipf_keys(wave_keys, vocab, alpha=1.0, seed=i)
+        if i >= shift_at:
+            keys = perm[keys]
+        h = st.prefetch(keys)
+        front_n, warm_n, cold_n = h.shards[0], h.shards[1], h.shards[2]
+        rates.append((front_n + warm_n) / max(1, front_n + warm_n + cold_n))
+    return rates
+
+
+def _aging_drill(ecfg, *, waves, window) -> dict:
+    """Hot-set shift recovery: aged sketch vs never-forgetting control.
+
+    Zipf(1.0) ranks are re-labelled by a fixed permutation mid-run, so
+    yesterday's hot rows go cold instantly. The control's saturated
+    sketch counts can never be beaten (STRICT promotion), freezing the
+    warm set on stale rows; the aged sketch halves them away on the
+    virtual clock and re-places the new hot set."""
+    vocab, wave_keys, gap = 2048, 256, 1e-3
+    shift_at = waves // 2
+    rng = np.random.default_rng(123)
+    perm = rng.permutation(vocab).astype(np.int64)
+    scfg_aged = StoreConfig(cache_rows=32, warm_rows=256,
+                            aging_half_life_s=4 * gap)
+    scfg_ctrl = dataclasses.replace(scfg_aged, aging_half_life_s=0.0)
+    kw = dict(waves=waves, shift_at=shift_at, perm=perm,
+              wave_keys=wave_keys, vocab=vocab, wave_gap_s=gap)
+    aged = _hit_rate_trace(ecfg, scfg_aged, **kw)
+    ctrl = _hit_rate_trace(ecfg, scfg_ctrl, **kw)
+
+    def mean(xs):
+        return float(np.mean(xs)) if len(xs) else 0.0
+
+    pre_a = mean(aged[shift_at - window:shift_at])
+    post_a = mean(aged[-window:])
+    pre_c = mean(ctrl[shift_at - window:shift_at])
+    post_c = mean(ctrl[-window:])
+    return {
+        "waves": waves, "shift_at": shift_at, "window": window,
+        "aged_pre": pre_a, "aged_post": post_a,
+        "control_pre": pre_c, "control_post": post_c,
+        "aged_gap": pre_a - post_a, "control_gap": pre_c - post_c,
+        "recovers": bool(pre_a - post_a <= RECOVERY_GAP),
+        "control_stuck": bool(pre_c - post_c > RECOVERY_GAP),
+    }
+
+
+def _solver_drill(cfg, params, *, fast) -> dict:
+    """plan_placement vs the brute-force sweep at every target of a
+    multi-point sweep, then the chosen split served for real."""
+    ecfg = cfg.engram
+    step = EMULATED_STEP_S
+    # ttft_steps=2: serve()'s monolithic admission emits the first token
+    # one decode wave after the prefill wave
+    grid = dict(total_rows=4096, alpha=1.0, batch_tokens=64, step_s=step,
+                front_grid=(0, 64, 256, 1024),
+                warm_grid=(512, 2048, 4096), ttft_steps=2,
+                layers=cfg.engram_layers(), n_layers=cfg.n_layers)
+    base = 2 * step
+    targets = [1.02 * base, 1.2 * base, 1.5 * base, 2.5 * base]
+    points = []
+    all_match = True
+    for tgt in targets:
+        solver = plan_placement(ecfg, ttft_target_s=tgt, **grid)
+        brute = _best_plan(placement_sweep(ecfg, ttft_target_s=tgt, **grid))
+        match = solver.split == brute.split and \
+            solver.feasible == brute.feasible
+        all_match = all_match and match
+        points.append({"ttft_target_us": tgt * 1e6,
+                       "solver_split": solver.split,
+                       "brute_split": brute.split,
+                       "feasible": solver.feasible,
+                       "cost_usd": solver.cost_usd,
+                       "pred_ttft_us": solver.ttft_s * 1e6,
+                       "match": bool(match)})
+
+    # measured validation at the mid-target split: one admission wave of
+    # equal-length prompts, so per-request TTFT is the prefill step plus
+    # the chain's window overshoot — exactly what the model prices
+    plan = plan_placement(ecfg, ttft_target_s=1.5 * base, **grid)
+    scfg = StoreConfig(cache_rows=max(plan.front_rows, 2),
+                       warm_rows=max(plan.warm_rows, 2),
+                       aging_half_life_s=0.05)
+    mcfg = _tiny_cfg(scfg)
+    w = Workload(requests=4, max_new=4 if fast else 8, arrival="batch",
+                 zipf_alpha=1.0, prompt_pool=2, seed=7)
+    res = serve(mcfg, w, pool="CXL+SSD", params=init_params(mcfg, 0),
+                max_batch=4, max_len=64, prompt_bucket=8,
+                emulate_step_s=step)
+    measured = float(np.mean(res.ttft_v()))
+    rel_err = abs(plan.ttft_s - measured) / max(measured, 1e-12)
+    return {
+        "points": points, "all_match": bool(all_match),
+        "plan_split": plan.split,
+        "pred_ttft_us": plan.ttft_s * 1e6,
+        "measured_ttft_us": measured * 1e6,
+        "rel_err": rel_err,
+        "within_tol": bool(rel_err <= TTFT_PRED_TOL),
+    }
+
+
+def _replay_check(cfg, params) -> dict:
+    """Chain trace replay — plain and sharded over a 2-node fabric —
+    must equal the engine's measured stall exactly."""
+    out = {}
+    for nodes in (None, 2):
+        kw = {"fabric_nodes": nodes} if nodes else {}
+        eng = Engine(cfg, params=params, max_batch=2, max_len=32,
+                     prompt_bucket=8, pool="CXL+SSD",
+                     emulate_step_s=5e-5, **kw)
+        for r in range(4):
+            eng.submit([5 + r, 17, 42], max_new=4)
+        stats = eng.run()
+        pred = replay_stall_s(cfg.engram, "CXL+SSD", eng.scheduler.trace,
+                              layers=cfg.engram_layers(),
+                              n_layers=cfg.n_layers,
+                              store_cfg=cfg.engram.store,
+                              fabric_nodes=nodes)
+        out[f"M{nodes or 0}"] = {"engine_stall_s": stats.stall_s,
+                                 "replay_stall_s": pred,
+                                 "exact": pred == stats.stall_s}
+    return out
+
+
+def run(fast: bool = False) -> dict:
+    requests = 12 if fast else 24
+    max_new = 4 if fast else 8
+
+    rows, cap_meta = _capacity_drill(None, requests=requests,
+                                     max_new=max_new)
+    emit("tiering/capacity/p99_ratio", cap_meta["p99_ratio"],
+         f"universe={cap_meta['universe_rows']} "
+         f"front={cap_meta['front_rows']} warm={cap_meta['warm_rows']} "
+         f"chain_p99={rows[1]['ttft_p99_us']:.1f}us "
+         f"base_p99={rows[0]['ttft_p99_us']:.1f}us")
+    write_csv("tiering_capacity",
+              list(rows[0].keys()), [list(r.values()) for r in rows])
+
+    chain_scfg = StoreConfig(cache_rows=32, warm_rows=256,
+                             aging_half_life_s=0.05)
+    cfg = _tiny_cfg(chain_scfg)
+    params = init_params(cfg, 0)
+
+    aging = _aging_drill(cfg.engram, waves=40 if fast else 80,
+                         window=6 if fast else 10)
+    emit("tiering/aging/gap", aging["aged_gap"],
+         f"control_gap={aging['control_gap']:.3f} "
+         f"aged_post={aging['aged_post']:.3f} "
+         f"control_post={aging['control_post']:.3f}")
+    solver = _solver_drill(cfg, params, fast=fast)
+    emit("tiering/solver/rel_err", solver["rel_err"],
+         f"pred={solver['pred_ttft_us']:.1f}us "
+         f"measured={solver['measured_ttft_us']:.1f}us "
+         f"split={solver['plan_split']} match={solver['all_match']}")
+    replay = _replay_check(cfg, params)
+    emit("tiering/replay", replay["M2"]["replay_stall_s"] * 1e6,
+         f"exact={replay['M0']['exact'] and replay['M2']['exact']}")
+
+    checks = {
+        "chain_ttft_bounded": bool(
+            cap_meta["p99_ratio"] <= TOL_CHAIN_P99),
+        "aging_recovers": bool(
+            aging["recovers"] and aging["control_stuck"]),
+        "solver_matches_sweep": bool(solver["all_match"]),
+        "solver_predicts_measured": bool(solver["within_tol"]),
+        "replay_bit_identical": bool(
+            replay["M0"]["exact"] and replay["M2"]["exact"]),
+    }
+    out = {
+        "emulate_step_s": EMULATED_STEP_S,
+        "tolerances": {"chain_p99": TOL_CHAIN_P99,
+                       "recovery_gap": RECOVERY_GAP,
+                       "ttft_pred": TTFT_PRED_TOL, "oversub": OVERSUB},
+        "capacity": {"rows": rows, **cap_meta},
+        "aging": aging,
+        "solver": solver,
+        "replay": replay,
+        "checks": checks,
+    }
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    with open(OUT_DIR / "BENCH_tiering.json", "w") as f:
+        json.dump(out, f, indent=2)
+    for name, ok in checks.items():
+        emit(f"tiering/check/{name}", 0.0 if ok else 1.0,
+             "PASS" if ok else "FAIL")
+    if not all(checks.values()):
+        raise SystemExit(f"bench_tiering checks failed: "
+                         f"{[k for k, v in checks.items() if not v]}")
+    return out
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

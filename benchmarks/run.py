@@ -1,9 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run trajectory [--last-n N]
 
 Prints ``name,us_per_call,derived`` CSV rows; per-table CSVs land in
-experiments/bench/.
+experiments/bench/. The ``trajectory`` command folds every BENCH_*.json
+artifact into BENCH_trajectory.json and exits nonzero when any check
+fails or any direction-gated metric regressed (benchmarks/trajectory.py).
 """
 from __future__ import annotations
 
@@ -21,6 +24,7 @@ BENCHES = [
     ("load", "Offered-load TTFT/latency percentiles vs QPS x tier"),
     ("overload", "SLO admission + preemption w/ KV spill under bursts"),
     ("fabric", "Sharded pool fabric: shard sweep + failure drills"),
+    ("tiering", "DRAM->CXL->SSD chain: capacity, aging, placement solver"),
     ("prefill", "Chunked prefill + fleet prefix KV cache: gaps + FLOPs"),
     ("hotpath", "Single-sync wave hot path: waves/s + d->h transfer budget"),
     ("cost", "Tables 4/5: capex comparison"),
@@ -29,6 +33,10 @@ BENCHES = [
 
 
 def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv and argv[0] == "trajectory":
+        from .trajectory import main as trajectory_main
+        return trajectory_main(argv[1:])
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)

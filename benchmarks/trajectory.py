@@ -1,0 +1,133 @@
+"""Benchmark trajectory: collect every BENCH_*.json into one ledger.
+
+Each bench module writes a ``BENCH_<name>.json`` artifact with its
+measurements and a ``checks`` dict. This harness flattens all of them
+into one snapshot, appends it to ``BENCH_trajectory.json`` (a rolling
+history of the last ``KEEP`` snapshots), and gates:
+
+  * every ``checks.*`` flag in the current snapshot must be True;
+  * every numeric metric with a known direction (``*_us``/``*_ms``/
+    ``*_ratio``/``*stall*``/``rel_err`` lower-better; ``*hits*``/
+    ``*tokens_per*``/``*attainment*`` higher-better) must not regress
+    more than ``tol`` against the best of the last ``last_n`` snapshots.
+
+Everything runs on the virtual clock, so bench metrics are deterministic
+— a regression in this ledger is a code change, not noise. CI runs
+``python -m benchmarks.run trajectory`` after the bench jobs and fails
+on nonzero exit (the "no metric regressed" gate, ROADMAP item 5).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from .common import OUT_DIR
+
+KEEP = 20           # snapshots retained in the ledger
+LOWER = ("_us", "_ms", "_ratio", "rel_err", "stall", "_gap")
+HIGHER = ("hits", "tokens_per", "attainment", "recovers")
+
+
+def _flatten(prefix: str, obj, out: dict) -> None:
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _flatten(f"{prefix}.{k}" if prefix else str(k), v, out)
+    elif isinstance(obj, list):
+        return                       # per-row tables are not trajectory-able
+    elif isinstance(obj, bool):
+        out[prefix] = bool(obj)
+    elif isinstance(obj, (int, float)):
+        out[prefix] = float(obj)
+
+
+def _direction(name: str):
+    """-1 lower-better, +1 higher-better, None ungated."""
+    leaf = name.rsplit(".", 1)[-1]
+    if any(t in leaf for t in LOWER):
+        return -1
+    if any(t in leaf for t in HIGHER):
+        return +1
+    return None
+
+
+def collect() -> dict:
+    """One snapshot: every BENCH_*.json flattened under its bench name."""
+    snap = {}
+    for path in sorted(OUT_DIR.glob("BENCH_*.json")):
+        name = path.stem[len("BENCH_"):]
+        if name == "trajectory":
+            continue
+        with open(path) as f:
+            _flatten(name, json.load(f), snap)
+    return snap
+
+
+def compare(snap: dict, history: list, *, last_n: int, tol: float) -> list:
+    """Regressions of ``snap`` vs the best of the last ``last_n``
+    snapshots, as ``(metric, current, best, kind)`` tuples. Checks
+    (bool leaves under a ``checks.`` segment) gate on the current value
+    alone; directed numerics gate on relative slip beyond ``tol``."""
+    bad = []
+    for name, val in sorted(snap.items()):
+        if isinstance(val, bool):
+            if ".checks." in name and not val:
+                bad.append((name, val, True, "check"))
+            continue
+        d = _direction(name)
+        if d is None:
+            continue
+        prev = [h["metrics"][name] for h in history[-last_n:]
+                if name in h["metrics"]
+                and not isinstance(h["metrics"][name], bool)]
+        if not prev:
+            continue
+        best = min(prev) if d < 0 else max(prev)
+        scale = max(abs(best), 1e-9)
+        slip = (val - best) / scale if d < 0 else (best - val) / scale
+        if slip > tol:
+            bad.append((name, val, best, "regression"))
+    return bad
+
+
+def run(last_n: int = 5, tol: float = 0.15) -> int:
+    ledger_path = OUT_DIR / "BENCH_trajectory.json"
+    history = []
+    if ledger_path.exists():
+        with open(ledger_path) as f:
+            history = json.load(f).get("runs", [])
+    snap = collect()
+    if not snap:
+        print("trajectory: no BENCH_*.json artifacts under "
+              f"{OUT_DIR}", file=sys.stderr)
+        return 1
+    bad = compare(snap, history, last_n=last_n, tol=tol)
+    history.append({"seq": (history[-1]["seq"] + 1 if history else 0),
+                    "metrics": snap})
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    with open(ledger_path, "w") as f:
+        json.dump({"last_n": last_n, "tol": tol,
+                   "runs": history[-KEEP:]}, f, indent=2)
+    n_checks = sum(1 for k, v in snap.items()
+                   if isinstance(v, bool) and ".checks." in k)
+    n_gated = sum(1 for k, v in snap.items()
+                  if not isinstance(v, bool) and _direction(k) is not None)
+    print(f"trajectory: {len(snap)} metrics ({n_checks} checks, "
+          f"{n_gated} direction-gated) over {len(history)} snapshot(s)")
+    for name, cur, best, kind in bad:
+        print(f"trajectory REGRESSED [{kind}]: {name} = {cur} "
+              f"(best of last {last_n}: {best})", file=sys.stderr)
+    return 1 if bad else 0
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--last-n", type=int, default=5)
+    ap.add_argument("--tol", type=float, default=0.15)
+    args = ap.parse_args(argv)
+    return run(last_n=args.last_n, tol=args.tol)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

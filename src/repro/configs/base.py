@@ -41,6 +41,12 @@ class StoreConfig:
     cache_tier: str = "DRAM"               # tier serving cache hits
     prefetch_depth: int = 1                # scheduler pipeline depth (0 | 1)
     admission: str = "lru"                 # cache admission: lru | tinylfu
+    # three-level chain knobs (pool/tierchain.py, pool="CXL+SSD" specs):
+    # warm_rows caps the middle (CXL-resident) partition; rows beyond it
+    # live on the cold tier. aging_half_life_s > 0 turns on virtual-clock
+    # decay of the promotion sketch (0 = frequency ranking never forgets).
+    warm_rows: int = 0                     # chain warm-tier capacity (rows)
+    aging_half_life_s: float = 0.0         # sketch decay half-life (clock s)
 
 
 @dataclass(frozen=True)

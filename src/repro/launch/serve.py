@@ -20,12 +20,18 @@ from .train import reduced_config
 
 
 def with_store(cfg, *, cache_rows: int = 0, cache_tier: str = "DRAM",
-               prefetch_depth: int = 1, admission: str = "lru"):
-    """Return ``cfg`` with tiered-store knobs on its EngramConfig."""
+               prefetch_depth: int = 1, admission: str = "lru",
+               warm_rows: int = 0, aging_half_life_s: float = 0.0):
+    """Return ``cfg`` with tiered-store knobs on its EngramConfig.
+    ``warm_rows``/``aging_half_life_s`` size a three-level chain
+    (``pool="CXL+SSD"`` specs, pool/tierchain.py): the CXL-resident
+    partition and the promotion sketch's virtual-clock decay."""
     if cfg.engram is None:
         return cfg
     scfg = StoreConfig(cache_rows=cache_rows, cache_tier=cache_tier,
-                       prefetch_depth=prefetch_depth, admission=admission)
+                       prefetch_depth=prefetch_depth, admission=admission,
+                       warm_rows=warm_rows,
+                       aging_half_life_s=aging_half_life_s)
     return dataclasses.replace(
         cfg, engram=dataclasses.replace(cfg.engram, store=scfg))
 
@@ -36,7 +42,8 @@ def run_once(cfg, *, requests: int, max_new: int, pool, params=None,
              zipf_alpha: float = 0.0, admission: str = "lru",
              spec: SpecConfig = None, prompt_pool: int = 0,
              replicas: int = 1, policy: str = "round_robin",
-             shared_cache: bool = True, qps: float = 0.0):
+             shared_cache: bool = True, qps: float = 0.0,
+             warm_rows: int = 0, aging_half_life_s: float = 0.0):
     """One workload drive through `serving.serve` (kept as the stable
     knob-level entry the benchmarks call). Returns (frontend, stats):
     the frontend is an `EngramRuntime` (or a `Router` for replicas>1)."""
@@ -44,8 +51,10 @@ def run_once(cfg, *, requests: int, max_new: int, pool, params=None,
     # numerically equivalent per tests/test_perf_flags.py, ~7x less decode
     # cache traffic). The dry-run baselines keep RunFlags() defaults.
     flags = RunFlags(attn_bf16_scores=True)
-    if cache_rows:
-        cfg = with_store(cfg, cache_rows=cache_rows, admission=admission)
+    if cache_rows or warm_rows:
+        cfg = with_store(cfg, cache_rows=cache_rows, admission=admission,
+                         warm_rows=warm_rows,
+                         aging_half_life_s=aging_half_life_s)
     workload = Workload(requests=requests, max_new=max_new,
                         prompt_pool=prompt_pool, zipf_alpha=zipf_alpha,
                         arrival="poisson" if qps > 0 else "batch",
@@ -85,11 +94,21 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--pool", default=None,
-                    choices=[None, "DRAM", "CXL", "RDMA", "RDMA-agg", "HBM"],
-                    nargs="?")
+                    choices=[None, "DRAM", "CXL", "RDMA", "RDMA-agg", "HBM",
+                             "CXL+SSD", "DRAM+CXL+SSD"],
+                    nargs="?",
+                    help="pool tier, or a multi-level chain spec "
+                         "(pool/tierchain.py; chains need --warm-rows)")
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="LRU hot-row cache capacity in front of the pool "
-                         "tier (0 = off; paper §6 rescue)")
+                         "tier (0 = off; paper §6 rescue); for a chain "
+                         "spec this sizes the DRAM front")
+    ap.add_argument("--warm-rows", type=int, default=0,
+                    help="chain warm-partition capacity in rows "
+                         "(required for --pool CXL+SSD chains)")
+    ap.add_argument("--aging-half-life", type=float, default=0.0,
+                    help="virtual-clock half-life (s) for the chain's "
+                         "promotion-sketch decay (0 = never forget)")
     ap.add_argument("--admission", default="lru",
                     choices=["lru", "tinylfu"],
                     help="hot-row cache admission policy")
@@ -128,6 +147,9 @@ def main(argv=None) -> int:
     if args.admission != "lru" and not args.cache_rows:
         ap.error("--admission needs --cache-rows > 0 (the policy gates "
                  "inserts into the hot-row cache)")
+    if args.pool and "+" in args.pool and not args.warm_rows:
+        ap.error("a chain pool spec needs --warm-rows > 0 (the "
+                 "CXL-resident partition's capacity)")
     if args.compare and (args.speculate or args.cache_rows
                          or args.zipf_alpha or args.prompt_pool
                          or args.replicas > 1):
@@ -145,6 +167,8 @@ def main(argv=None) -> int:
                               pool=args.pool, max_batch=args.max_batch,
                               max_len=args.max_len,
                               cache_rows=args.cache_rows,
+                              warm_rows=args.warm_rows,
+                              aging_half_life_s=args.aging_half_life,
                               admission=args.admission, spec=spec,
                               zipf_alpha=args.zipf_alpha,
                               prompt_pool=args.prompt_pool,

@@ -44,7 +44,8 @@ class FrequencySketch:
     seen without storing per-key state."""
 
     def __init__(self, width: int = 1 << 15, depth: int = 4,
-                 max_count: int = 15, sample_factor: int = 16):
+                 max_count: int = 15, sample_factor: int = 16,
+                 decay_half_life_s: float | None = None):
         assert width & (width - 1) == 0, "width must be a power of two"
         self.width = width
         self.depth = depth
@@ -55,6 +56,29 @@ class FrequencySketch:
              for i in range(depth)], np.uint64)
         self._ops = 0
         self._sample_limit = sample_factor * width
+        # virtual-clock aging (FadeMem-style forgetting): counts halve
+        # every half-life of *clock* time, so a workload shift re-ranks
+        # the hot set even when the op rate is low. None = op-count
+        # halving only (the classic TinyLFU sample backstop, kept either
+        # way as saturation protection).
+        self.decay_half_life_s = decay_half_life_s
+        self._last_decay_s = 0.0
+
+    def decay(self, now_s: float) -> int:
+        """Apply virtual-clock aging up to ``now_s``: one table halving
+        per elapsed half-life since the last decay. Returns the number of
+        halvings applied (0 when aging is off or the half-life has not
+        elapsed). Deterministic in ``now_s`` — replay-safe."""
+        hl = self.decay_half_life_s
+        if hl is None or hl <= 0.0:
+            return 0
+        steps = 0
+        while now_s - self._last_decay_s >= hl:
+            self._table >>= 1
+            self._ops //= 2
+            self._last_decay_s += hl
+            steps += 1
+        return steps
 
     def _slots(self, keys: np.ndarray) -> np.ndarray:
         """(depth, n) table columns for each key."""
@@ -461,8 +485,17 @@ class _PrefixCacheView:
 def zipf_keys(n: int, vocab: int, *, alpha: float = 1.2,
               seed: int = 0) -> np.ndarray:
     """Zipf-distributed key stream over [0, vocab) — the paper's reuse
-    assumption, used by tests/benchmarks to drive the cache."""
+    assumption, used by tests/benchmarks to drive the cache.
+
+    ``alpha > 1`` keeps the historical rejection-sampled ``rng.zipf``
+    stream (bit-compatible with earlier callers). ``alpha <= 1`` (where
+    numpy's sampler is undefined) draws from the exact finite Zipf law
+    ``P(rank r) ∝ r^-alpha`` over the vocab — the Zipf(1.0) operating
+    point the tiering benchmark drives."""
     rng = np.random.RandomState(seed)
+    if alpha <= 1.0:
+        w = np.arange(1, vocab + 1, dtype=np.float64) ** -alpha
+        return rng.choice(vocab, size=n, p=w / w.sum()).astype(np.int64)
     ranks = rng.zipf(alpha, size=4 * n)
     ranks = ranks[ranks <= vocab][:n]
     while ranks.size < n:                      # heavy tail can over-reject

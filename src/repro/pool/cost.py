@@ -55,6 +55,7 @@ DEFAULT_PRICES = {
     "cxl_switch": 5800.00,
     "cxl_adapter": 210.00,       # per host node
     "cxl_controller": 300.00,    # per host node (paired in the pool)
+    "ssd_per_gb": 0.08,          # datacenter NVMe (PM9A3/P5510 street)
 }
 
 
@@ -89,6 +90,19 @@ def cost_table(engram_gbs=(200.0, 800.0), node_counts=(2, 4, 8, 16),
             rows.append(CostRow(gb, n, local_cost(gb, n, prices),
                                 pool_cost(gb, n, prices)))
     return rows
+
+
+def chain_cost(dram_gb: float, cxl_gb: float, ssd_gb: float,
+               nodes: int = 1, prices=DEFAULT_PRICES) -> float:
+    """Capital cost of a three-level placement (pool/tierchain.py): a
+    private DRAM front per host node, one pooled CXL partition behind the
+    switch (fixed fabric + pooled DRAM, the ``pool_cost`` structure), and
+    SSD cold capacity at flash $/GB. The placement solver's objective."""
+    return (prices["dram_per_gb"] * dram_gb * nodes
+            + prices["cxl_switch"]
+            + nodes * (prices["cxl_adapter"] + prices["cxl_controller"])
+            + prices["dram_per_gb"] * cxl_gb
+            + prices["ssd_per_gb"] * ssd_gb)
 
 
 def breakeven_nodes(engram_gb: float, prices=DEFAULT_PRICES) -> float:

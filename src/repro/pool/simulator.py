@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from ..configs.base import EngramConfig
 from .feasibility import ServingPoint
 from .store import CachedStore, TierStore, segment_bytes, segment_count
@@ -149,7 +151,12 @@ def replay_stall_s(ecfg: EngramConfig, tier, trace, *, layers, n_layers,
     fabric = None
     if fabric_nodes:
         from .fabric import PoolFabric
-        fabric = PoolFabric(ecfg, int(fabric_nodes), tier=tier, clock=clock)
+        from .tiers import pool_tier
+        # a chain spec shards its WARM level over the fabric (the cold
+        # tier keeps its own link inside the chain store)
+        ftier = pool_tier(tier) if isinstance(tier, str) else tier
+        fabric = PoolFabric(ecfg, int(fabric_nodes), tier=ftier,
+                            clock=clock)
     store = make_store(ecfg, tier, store_cfg=store_cfg, clock=clock,
                        fabric=fabric)
     store.bind_cursor(cursor)
@@ -169,6 +176,164 @@ def replay_stall_s(ecfg: EngramConfig, tier, trace, *, layers, n_layers,
                                 wave.step_s)
             total += report.stall_s
     return total
+
+
+# ---------------------------------------------------------------------------
+# three-level placement solver (pool/tierchain.py's analytic twin)
+# ---------------------------------------------------------------------------
+
+def chain_hit_fractions(front_rows: int, warm_rows: int, total_rows: int,
+                        alpha: float) -> tuple[float, float, float]:
+    """Steady-state (front, warm, cold) traffic fractions for a finite
+    Zipf(``alpha``) key stream over ``total_rows`` distinct rows when the
+    hottest ``front_rows`` live in the DRAM front and the next
+    ``warm_rows`` in the warm partition (LRU + aged-TinyLFU placement
+    converges to rank order on a stationary stream). Generalized harmonic
+    sums: P(rank <= k) = H_alpha(k) / H_alpha(total)."""
+    total = max(1, int(total_rows))
+    front = min(max(0, int(front_rows)), total)
+    warm = min(max(0, int(warm_rows)), total - front)
+    w = np.arange(1, total + 1, dtype=np.float64) ** -float(alpha)
+    cum = np.cumsum(w)
+    h_total = float(cum[-1])
+    p_front = float(cum[front - 1]) / h_total if front else 0.0
+    p_fw = float(cum[front + warm - 1]) / h_total if front + warm else 0.0
+    return p_front, p_fw - p_front, 1.0 - p_fw
+
+
+def predict_chain_ttft_s(ecfg: EngramConfig, *, front_rows: int,
+                         warm_rows: int, total_rows: int, alpha: float,
+                         batch_tokens: int, step_s: float, layers,
+                         n_layers: int, ttft_steps: int = 1,
+                         levels=("DRAM", "CXL", "SSD")) -> float:
+    """Predicted admission-wave TTFT for one placement: ``ttft_steps``
+    emulated steps (1 = the bare prefill wave; the monolithic-admission
+    serving path emits its first token one decode wave later, so
+    ``serve()`` comparisons use 2) plus each Engram layer's window
+    overshoot on the admission wave, with the
+    wave's expected segment counts split over the chain by
+    ``chain_hit_fractions`` and the three levels fetched in parallel
+    (``TierChain``'s max-of-paths charge; the cold level is an aggregate
+    tier, so its count prices as ONE scatter-gather payload). This is the
+    model the placement solver optimizes and bench_tiering validates
+    against measured ``serve()`` TTFT."""
+    p_f, p_w, _ = chain_hit_fractions(front_rows, warm_rows, total_rows,
+                                      alpha)
+    n = segment_count(ecfg, batch_tokens)
+    seg = segment_bytes(ecfg)
+    n_f = int(round(n * p_f))
+    n_w = int(round(n * p_w))
+    n_c = max(0, n - n_f - n_w)
+    lat = 0.0
+    for count, name in ((n_f, levels[0]), (n_w, levels[1]),
+                        (n_c, levels[2])):
+        if count > 0:
+            lat = max(lat, TIERS[name].read_latency_s(count, seg))
+    stall = sum(max(0.0, lat - k * step_s / max(1, int(n_layers)))
+                for k in layers)
+    return max(1, int(ttft_steps)) * step_s + stall
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPlan:
+    """One evaluated DRAM/CXL/SSD split."""
+    front_rows: int
+    warm_rows: int
+    cold_rows: int
+    ttft_s: float                     # predicted admission-wave TTFT
+    cost_usd: float
+    feasible: bool                    # meets the TTFT target
+
+    @property
+    def split(self) -> tuple[int, int, int]:
+        return self.front_rows, self.warm_rows, self.cold_rows
+
+
+def _chain_plan(ecfg, front: int, warm: int, *, total_rows, alpha,
+                batch_tokens, step_s, ttft_target_s, layers, n_layers,
+                nodes, prices, levels, ttft_steps=1) -> PlacementPlan:
+    from .cost import DEFAULT_PRICES, chain_cost
+    seg = segment_bytes(ecfg)
+    cold = max(0, int(total_rows) - front - warm)
+    ttft = predict_chain_ttft_s(
+        ecfg, front_rows=front, warm_rows=warm, total_rows=total_rows,
+        alpha=alpha, batch_tokens=batch_tokens, step_s=step_s,
+        layers=layers, n_layers=n_layers, ttft_steps=ttft_steps,
+        levels=levels)
+    gb = seg / 1e9
+    cost = chain_cost(front * gb, warm * gb, cold * gb, nodes=nodes,
+                      prices=prices if prices is not None
+                      else DEFAULT_PRICES)
+    return PlacementPlan(front_rows=front, warm_rows=warm, cold_rows=cold,
+                         ttft_s=ttft, cost_usd=cost,
+                         feasible=ttft <= ttft_target_s)
+
+
+def _best_plan(plans: list) -> PlacementPlan:
+    """Optimum under the shared objective: minimum cost among feasible
+    plans, ties broken by lowest predicted TTFT then smallest split; when
+    nothing meets the target, the lowest-TTFT (then cheapest) plan with
+    ``feasible=False`` — solver and brute force share this exact rule, so
+    their chosen splits must agree."""
+    feas = [p for p in plans if p.feasible]
+    if feas:
+        return min(feas, key=lambda p: (p.cost_usd, p.ttft_s,
+                                        p.front_rows, p.warm_rows))
+    return min(plans, key=lambda p: (p.ttft_s, p.cost_usd,
+                                     p.front_rows, p.warm_rows))
+
+
+def placement_sweep(ecfg: EngramConfig, *, total_rows: int, alpha: float,
+                    batch_tokens: int, step_s: float, ttft_target_s: float,
+                    front_grid, warm_grid, layers, n_layers: int,
+                    nodes: int = 1, prices=None, ttft_steps: int = 1,
+                    levels=("DRAM", "CXL", "SSD")) -> list:
+    """Brute force: evaluate EVERY (front, warm) grid point ->
+    ``PlacementPlan`` list (the solver's ground truth)."""
+    return [_chain_plan(ecfg, int(f), int(w), total_rows=total_rows,
+                        alpha=alpha, batch_tokens=batch_tokens,
+                        step_s=step_s, ttft_target_s=ttft_target_s,
+                        layers=layers, n_layers=n_layers, nodes=nodes,
+                        prices=prices, levels=levels,
+                        ttft_steps=ttft_steps)
+            for f in front_grid for w in warm_grid]
+
+
+def plan_placement(ecfg: EngramConfig, *, total_rows: int, alpha: float,
+                   batch_tokens: int, step_s: float, ttft_target_s: float,
+                   front_grid, warm_grid, layers, n_layers: int,
+                   nodes: int = 1, prices=None, ttft_steps: int = 1,
+                   levels=("DRAM", "CXL", "SSD")) -> PlacementPlan:
+    """Placement solver: the min-cost DRAM/CXL/SSD split meeting the TTFT
+    target. Exploits monotone structure instead of the full grid:
+    predicted TTFT is non-increasing and cost increasing in either
+    capacity (cold is the cheapest $/GB), so per warm level a binary
+    search over the ascending front grid finds the cheapest feasible
+    front — O(W log F) model evaluations vs the sweep's O(W·F) — and the
+    winner is the cheapest per-warm candidate under ``_best_plan``'s
+    rule. Validated against ``placement_sweep`` by bench_tiering."""
+    def plan(f, w):
+        return _chain_plan(ecfg, int(f), int(w), total_rows=total_rows,
+                           alpha=alpha, batch_tokens=batch_tokens,
+                           step_s=step_s, ttft_target_s=ttft_target_s,
+                           layers=layers, n_layers=n_layers, nodes=nodes,
+                           prices=prices, levels=levels,
+                           ttft_steps=ttft_steps)
+    fronts = sorted(int(f) for f in front_grid)
+    cands = []
+    for w in warm_grid:
+        lo, hi = 0, len(fronts) - 1
+        if not plan(fronts[hi], w).feasible:      # nothing feasible here
+            cands.append(plan(fronts[0], w))      # best-effort fallback
+            continue
+        while lo < hi:                            # first feasible front
+            mid = (lo + hi) // 2
+            if plan(fronts[mid], w).feasible:
+                hi = mid
+            else:
+                lo = mid + 1
+        cands.append(plan(fronts[lo], w))
+    return _best_plan(cands)
 
 
 def throughput_table(ecfg: EngramConfig, point: ServingPoint,

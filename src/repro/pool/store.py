@@ -46,7 +46,7 @@ import numpy as np
 
 from ..configs.base import EngramConfig
 from .cache import LRUHotRowCache, TinyLFUAdmission, WaveAccess
-from .tiers import TIERS, TierSpec
+from .tiers import TIERS, TierSpec, is_chain
 
 
 # ---------------------------------------------------------------------------
@@ -162,9 +162,19 @@ class StoreStats:
     # ---- per-traffic-class pool occupancy (KV pages vs Engram rows) -----
     # bytes / link busy-seconds this store put on the shared medium, split
     # by class ("engram": row fetches; "kv": preemption spills/restores,
-    # pool/kvpool.py) — the arbitration observable of ROADMAP item 1
+    # pool/kvpool.py; "promote"/"demote": tier-chain migration traffic,
+    # pool/tierchain.py) — the arbitration observable of ROADMAP item 1
     class_bytes: dict = dataclasses.field(default_factory=dict)
     class_busy_s: dict = dataclasses.field(default_factory=dict)
+    # ---- three-level chain accounting (pool/tierchain.py) ---------------
+    # hits/misses above stay the front-cache split (hits = DRAM front);
+    # these split the miss side by which backing level actually served it,
+    # plus the CXL<->SSD migration counts whose bytes ride the class
+    # ledgers under "promote"/"demote"
+    warm_hits: int = 0                 # served by the warm (CXL) level
+    cold_misses: int = 0               # served by the cold (SSD) level
+    promotions: int = 0                # rows promoted cold -> warm
+    demotions: int = 0                 # rows written back warm -> cold
 
     @property
     def hit_rate(self) -> float:
@@ -587,6 +597,13 @@ def make_store(ecfg: EngramConfig, tier: TierSpec | str | None,
     instead of a single-link tier — the fabric owns its own clock links,
     so ``clock`` only matters for the cache front-end then."""
     scfg = store_cfg if store_cfg is not None else ecfg.store
+    if tier is not None and is_chain(tier):
+        from .tierchain import TierChain
+        assert cache is None, \
+            "shared hot-row cache views are unsupported over a tier chain " \
+            "(the chain owns its DRAM front internally)"
+        return TierChain(ecfg, tier, store_cfg=scfg, clock=clock,
+                         fabric=fabric)
     if tier is None and fabric is None:
         return LocalStore(ecfg)
     if fabric is not None:

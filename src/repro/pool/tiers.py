@@ -95,4 +95,33 @@ RDMA_AGG = TierSpec("RDMA-agg", base_latency_s=18e-6,
                     segment_latency_s=2.2e-6, bandwidth_Bps=12.5e9,
                     concurrency=4096, per_message_s=0.0, aggregate=True)
 
-TIERS = {t.name: t for t in (DRAM, CXL, RDMA, HBM, RDMA_AGG)}
+# Cold tier: datacenter NVMe (PCIe4 x4 class — Samsung PM9A3 / Intel
+# P5510 datasheets: ~80 us random 4K read, ~6.5 GB/s sequential). Block
+# access makes per-row reads ruinous, so the spec is aggregate-only: a
+# wave's cold misses go out as ONE scatter-gather payload (TF-Engram's
+# batched-read discipline), single device latency + wire time.
+SSD = TierSpec("SSD", base_latency_s=20e-6, segment_latency_s=80e-6,
+               bandwidth_Bps=6.5e9, concurrency=256, aggregate=True)
+
+TIERS = {t.name: t for t in (DRAM, CXL, RDMA, HBM, RDMA_AGG, SSD)}
+
+
+def chain_levels(pool: str) -> list[str]:
+    """Level names of a ``"CXL+SSD"``-style chain spec, warm-to-cold.
+    A plain tier name yields a single-element list."""
+    names = [p.strip() for p in pool.split("+") if p.strip()]
+    assert names, f"empty pool spec {pool!r}"
+    for n in names:
+        assert n in TIERS, f"unknown tier {n!r} in pool spec {pool!r}"
+    return names
+
+
+def is_chain(pool) -> bool:
+    """True when ``pool`` is a multi-level chain spec ("CXL+SSD")."""
+    return isinstance(pool, str) and "+" in pool
+
+
+def pool_tier(pool: str) -> TierSpec:
+    """The warm (first) ``TierSpec`` of a pool spec — what engine-side
+    gating (`_pool_mode`, TableFetcher) sees for a chain."""
+    return TIERS[chain_levels(pool)[0]]

@@ -98,7 +98,7 @@ from ..models.transformer import RunFlags
 from ..pool.kvpool import KVPagePool, PoolArbiter
 from ..pool.scheduler import PrefetchScheduler
 from ..pool.store import TableFetcher, make_store, segment_bytes
-from ..pool.tiers import TIERS
+from ..pool.tiers import pool_tier
 from .clock import VirtualClock
 from .slo import OverloadPolicy
 from .slots import (extract_prefix, gate_state, restore_prefix,
@@ -119,6 +119,10 @@ class Request:
     klass: str = "uniform"           # workload traffic class (zipf|uniform)
     slo: str = "batch"               # SLO class (serving/slo.py)
     preemptions: int = 0             # times this request was preempted
+    # decoded-token count at the last idle spill: a restored slot must
+    # decode another ``idle_spill_tokens`` past this ratchet before it is
+    # eligible to park again (the anti-thrash guard of long-context spill)
+    spill_mark: int = 0
     # virtual-clock lifecycle stamps (serving/clock.py): deterministic
     # TTFT/latency under offered load, independent of host wall time
     submitted_v: float = 0.0
@@ -220,6 +224,7 @@ class EngineStats:
     kv_spill_bytes: int = 0          # KV bytes paged out to the pool tier
     kv_restore_bytes: int = 0        # KV bytes fetched back on resume
     kv_spill_pages: int = 0          # fixed-size pages spilled
+    idle_spills: int = 0             # long-context spills (no preemption)
 
     @property
     def tokens_per_s(self) -> float:
@@ -325,7 +330,8 @@ class Engine:
                  fabric=None, fabric_nodes: Optional[int] = None,
                  slo_policy: Optional[OverloadPolicy] = None,
                  kv_pool: Optional[KVPagePool] = None,
-                 arbiter: Optional[PoolArbiter] = None):
+                 arbiter: Optional[PoolArbiter] = None,
+                 idle_spill_tokens: Optional[int] = None):
         """``emulate_step_s``: evaluate the pool stalls at a production
         operating point (ms-scale decode steps) instead of this host's
         CPU step times — stalls are then accounted in ``emu_time_s``
@@ -388,7 +394,9 @@ class Engine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.prompt_bucket = prompt_bucket
-        self.pool = TIERS[pool] if pool else None
+        # a chain spec ("CXL+SSD", pool/tierchain.py) resolves to its warm
+        # TierSpec for engine-side gating; the store owns the full chain
+        self.pool = pool_tier(pool) if pool else None
         self.emulate_step_s = emulate_step_s
         self.clock = clock if clock is not None else VirtualClock()
         self.cursor = self.clock.cursor(name if name else "engine")
@@ -418,8 +426,9 @@ class Engine:
             if store is None and fabric is None and fabric_nodes:
                 assert pool is not None, "fabric_nodes needs a pooled tier"
                 from ..pool.fabric import PoolFabric
+                # chain specs shard their WARM level over the fabric
                 self.fabric = PoolFabric(cfg.engram, int(fabric_nodes),
-                                         tier=pool, clock=link_clock)
+                                         tier=self.pool, clock=link_clock)
             self.store = store if store is not None \
                 else make_store(cfg.engram, pool, clock=link_clock,
                                 fabric=self.fabric)
@@ -551,6 +560,22 @@ class Engine:
             if self.kv_pool is None:
                 self.kv_pool = KVPagePool(slo_policy.spill_pool_bytes,
                                           slo_policy.spill_page_tokens)
+        # --- long-context idle spill (no preemption; ROADMAP item 1) -----
+        # a running slot whose decoded stream has grown by this many
+        # tokens since admission / its last spill may park its KV in the
+        # pool when queued demand exceeds the free slots — freeing the
+        # slot for fresh admits without any SLO-priority preemption. The
+        # two-phase restore path resumes it bit-identically later.
+        self.idle_spill_tokens = int(idle_spill_tokens) \
+            if idle_spill_tokens else None
+        if self.idle_spill_tokens is not None:
+            assert self.spec is None, \
+                "idle spill does not compose with speculative decoding " \
+                "(a parked slot's pipelined drafts have no rollback)"
+            assert self.prefill_chunk is None, \
+                "idle spill rides the monolithic admission wave"
+            if self.kv_pool is None:
+                self.kv_pool = KVPagePool(1 << 30, 8)
         # rid -> _SpilledReq: preempted requests parked in the KV pool
         self._spilled: dict[int, _SpilledReq] = {}
 
@@ -744,6 +769,25 @@ class Engine:
             for req in self._overload_admit():
                 self.queue.remove(req)
                 fills.append((self._free.popleft(), req))
+            if not fills:
+                return events
+        elif self.idle_spill_tokens is not None:
+            # long-context spill: complete last wave's restores, park
+            # eligible long-running slots when the queue outstrips the
+            # free slots, fill fresh admits FIRST, then let parked
+            # requests claim only the leftover slots (park/resume thrash
+            # would otherwise ping-pong one slot between two requests)
+            self._complete_restores()
+            self._idle_spill_for_queue()
+            while self._free and self.queue:
+                fills.append((self._free.popleft(), self.queue.popleft()))
+            parked = sorted((e for e in self._spilled.values()
+                             if e.phase == "spilled"),
+                            key=lambda e: e.req.rid)
+            for entry in parked:
+                if not self._free:
+                    break
+                self._begin_restore(entry, self._free.popleft())
             if not fills:
                 return events
         else:
@@ -1583,6 +1627,37 @@ class Engine:
                 chosen.append(c[4])
             budget -= 1
         return chosen
+
+    def _idle_spill_for_queue(self) -> None:
+        """Long-context KV spill WITHOUT priority preemption (the last
+        ROADMAP item 1 bullet): when queued demand exceeds the free
+        slots, running slots whose decoded stream has grown by
+        ``idle_spill_tokens`` since admission (or their last spill) park
+        their KV in the pool via the preempt/spill path — longest
+        resident context first (the biggest capacity win), near-done
+        requests spared (their restore would cost more than letting them
+        finish). ``spill_mark`` ratchets at each park so a restored slot
+        must decode another threshold's worth before it is eligible
+        again. Per-row greedy decode is batch-composition-independent, so
+        the parked request's resumed stream is bit-identical."""
+        need = len(self.queue) - len(self._free)
+        if need <= 0:
+            return
+        cands = []
+        for slot, req in enumerate(self.slots):
+            if req is None or req.status != "running":
+                continue
+            if len(req.out) - req.spill_mark < self.idle_spill_tokens:
+                continue
+            if req.max_new - len(req.out) <= 1:      # about to finish
+                continue
+            cands.append((-(len(req.prompt) + len(req.out)), slot, req))
+        cands.sort()
+        for _, slot, req in cands[:need]:
+            mark = len(req.out)
+            if self.preempt(slot):                   # may refuse (pool full)
+                req.spill_mark = mark
+                self.stats.idle_spills += 1
 
     def _preempt_for_queue(self) -> None:
         """Free slots for queued requests that strictly outrank a running

@@ -36,7 +36,7 @@ from ..pool.cache import (PrefixCacheStats, PrefixKVCache, SharedCache,
                           SharedCacheStats, TinyLFUAdmission)
 from ..pool.kvpool import KVPagePool, KVPoolStats, PoolArbiter
 from ..pool.store import make_store, segment_keys
-from ..pool.tiers import TIERS
+from ..pool.tiers import TIERS, is_chain, pool_tier
 from .clock import VirtualClock
 from .engine import Engine, EngineStats, Request
 from .runtime import EngramRuntime, RequestHandle, TokenEvent
@@ -251,10 +251,13 @@ class Router:
         if (fabric_nodes and pool is not None and cfg.engram is not None
                 and cfg.engram.enabled):
             from ..pool.fabric import PoolFabric
+            # chain specs ("CXL+SSD") shard their WARM level over the
+            # fabric; the chain store owns the cold tier's own link
             self.fabric = PoolFabric(cfg.engram, int(fabric_nodes),
-                                     tier=pool, clock=link_clock)
+                                     tier=pool_tier(pool), clock=link_clock)
         scfg = cfg.engram.store if cfg.engram is not None else None
-        if (shared_cache and pool is not None and scfg is not None
+        if (shared_cache and pool is not None and not is_chain(pool)
+                and scfg is not None
                 and cfg.engram.enabled and scfg.cache_rows > 0):
             adm = TinyLFUAdmission() if scfg.admission == "tinylfu" else None
             self.shared_cache = SharedCache(scfg.cache_rows, admission=adm)

@@ -1,0 +1,377 @@
+"""Three-level tier chain: sketch aging, chain routing, placement
+solver, trace replay, and long-context idle KV spill
+(pool/tierchain.py, pool/cache.py, pool/simulator.py, serving/engine.py).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conftest import reduced
+
+from repro.configs.base import StoreConfig
+from repro.launch.serve import with_store
+from repro.models.model import init_params
+from repro.pool.cache import FrequencySketch, zipf_keys
+from repro.pool.simulator import (_best_plan, chain_hit_fractions,
+                                  placement_sweep, plan_placement,
+                                  replay_stall_s)
+from repro.pool.store import Segments, make_store
+from repro.pool.tiers import TIERS, chain_levels, is_chain, pool_tier
+from repro.serving import EngramRuntime
+from repro.serving.clock import VirtualClock
+
+
+def tiny_cfg(scfg=None):
+    cfg = reduced("deepseek-7b")
+    e = dataclasses.replace(cfg.engram, layers=(1,),
+                            store=scfg if scfg is not None else StoreConfig())
+    return dataclasses.replace(cfg, n_layers=3, layer_types=("attn",) * 3,
+                               attn_kinds=("global",) * 3,
+                               ffn_types=("dense",) * 3, engram=e)
+
+
+CHAIN_SCFG = StoreConfig(cache_rows=32, warm_rows=256,
+                         aging_half_life_s=0.05)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return tiny_cfg(CHAIN_SCFG)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, 0)
+
+
+def _chain(ecfg, scfg=CHAIN_SCFG, spec="CXL+SSD"):
+    clock = VirtualClock()
+    cur = clock.cursor("test")
+    st = make_store(ecfg, spec, store_cfg=scfg, clock=clock)
+    st.bind_cursor(cur)
+    return st, cur
+
+
+def _drive(st, cur, waves, *, keys_per_wave=128, vocab=2048, alpha=1.0,
+           gap_s=1e-3, t0=0.0, perm=None):
+    routes = []
+    for i in range(waves):
+        cur.advance_to(t0 + i * gap_s)
+        cur.next_wave()
+        keys = zipf_keys(keys_per_wave, vocab, alpha=alpha, seed=i)
+        if perm is not None:
+            keys = perm[keys]
+        routes.append(st.prefetch(keys).shards)
+    return routes
+
+
+# ------------------------------------------------------------ tier specs
+
+
+def test_chain_spec_helpers():
+    assert chain_levels("CXL+SSD") == ["CXL", "SSD"]
+    assert chain_levels("DRAM+CXL+SSD") == ["DRAM", "CXL", "SSD"]
+    assert chain_levels("RDMA") == ["RDMA"]
+    assert is_chain("CXL+SSD") and not is_chain("CXL")
+    assert not is_chain(TIERS["CXL"])
+    assert pool_tier("CXL+SSD") is TIERS["CXL"]
+    assert pool_tier("DRAM") is TIERS["DRAM"]
+    with pytest.raises(AssertionError):
+        chain_levels("CXL+FLOPPY")
+
+
+def test_ssd_tier_is_aggregate():
+    """A wave of SSD cold misses prices as ONE scatter-gather payload:
+    software cost is flat in n, service is max(device, wire) — never the
+    per-row markup that would make flash ruinous."""
+    ssd = TIERS["SSD"]
+    assert ssd.aggregate
+    assert ssd.software_s(1) == ssd.software_s(512)
+    seg = 320
+    lat1, lat512 = ssd.read_latency_s(1, seg), ssd.read_latency_s(512, seg)
+    assert lat512 < 2 * lat1              # batched, not 512x
+    # wire-bound at large n
+    n = 1 << 20
+    assert ssd.service_s(n, seg) == pytest.approx(n * seg
+                                                  / ssd.bandwidth_Bps)
+
+
+# ---------------------------------------------------------- sketch aging
+
+
+def test_sketch_deterministic_across_instances():
+    """Fixed seeds, no hash() salting: two sketches (in any process)
+    estimate identical counts for the same observation stream."""
+    a, b = FrequencySketch(), FrequencySketch()
+    keys = zipf_keys(512, 4096, alpha=1.0, seed=3)
+    a.observe(keys)
+    b.observe(keys)
+    probe = np.arange(64, dtype=np.int64)
+    assert np.array_equal(a.estimate(probe), b.estimate(probe))
+    # exact small-count behaviour: a key seen k times (few keys, 2^15
+    # columns -> no collisions here) estimates exactly k
+    c = FrequencySketch()
+    for _ in range(5):
+        c.observe([7])
+    assert int(c.estimate([7])[0]) == 5
+    assert int(c.estimate([8])[0]) == 0
+
+
+def test_sketch_virtual_clock_halving():
+    s = FrequencySketch(decay_half_life_s=1.0)
+    for _ in range(8):
+        s.observe([42])
+    assert int(s.estimate([42])[0]) == 8
+    assert s.decay(0.5) == 0              # half-life not yet elapsed
+    assert int(s.estimate([42])[0]) == 8
+    assert s.decay(1.0) == 1
+    assert int(s.estimate([42])[0]) == 4
+    assert s.decay(3.2) == 2              # catch-up: two more halvings
+    assert int(s.estimate([42])[0]) == 1
+    # aging off: decay is a no-op
+    s2 = FrequencySketch()
+    s2.observe([42])
+    assert s2.decay(100.0) == 0
+    assert int(s2.estimate([42])[0]) == 1
+
+
+def test_chain_scan_resistance(cfg):
+    """A one-shot scan of fresh keys cannot displace an established hot
+    set: STRICT sketch promotion keeps the warm partition (and the gated
+    front) intact, so the wave after the scan hits like the wave before."""
+    st, cur = _chain(cfg.engram)
+    hot = np.arange(CHAIN_SCFG.warm_rows, dtype=np.int64)  # fills warm
+    for i in range(6):                    # establish the hot set
+        cur.advance_to(i * 1e-4)
+        cur.next_wave()
+        st.prefetch(hot)
+    warm_before = list(st._warm)
+    front_before = list(st._front)
+    cur.advance_to(7e-4)
+    cur.next_wave()
+    scan = st.prefetch(np.arange(10_000, 10_400, dtype=np.int64))
+    assert scan.shards[4] == 0            # no demotions for the scan
+    assert list(st._warm) == warm_before
+    assert list(st._front) == front_before
+    cur.advance_to(8e-4)
+    cur.next_wave()
+    after = st.prefetch(hot)
+    assert after.shards[2] == 0           # zero cold misses post-scan
+
+
+# --------------------------------------------------------- chain routing
+
+
+def test_chain_routes_conserve_and_ledger(cfg):
+    st, cur = _chain(cfg.engram)
+    routes = _drive(st, cur, 20)
+    for i, r in enumerate(routes):
+        keys = zipf_keys(128, 2048, alpha=1.0, seed=i)
+        uniq = np.unique(keys).size
+        front_n, warm_n, cold_n, promote_n, demote_n, split = r
+        assert front_n + warm_n + cold_n == uniq
+        assert promote_n <= cold_n        # only misses promote
+        assert split is None              # no fabric mounted
+    s = st.stats()
+    assert s.hits > 0 and s.warm_hits > 0 and s.cold_misses > 0
+    assert s.promotions > 0 and s.demotions > 0
+    # warm fill is promotion without demotion
+    assert s.promotions - s.demotions == len(st._warm)
+    assert len(st._front) <= CHAIN_SCFG.cache_rows
+    assert len(st._warm) <= CHAIN_SCFG.warm_rows
+    # per-class ledgers: demand rows + write-behind migrations
+    for klass in ("engram", "promote", "demote"):
+        assert s.class_bytes[klass] > 0
+        assert s.class_busy_s[klass] > 0
+    # reset preserves identity fields
+    st.reset_stats()
+    s2 = st.stats()
+    assert s2.tier == "CXL+SSD" and s2.cache_rows == CHAIN_SCFG.cache_rows
+    assert s2.hits == 0 and s2.promotions == 0
+
+
+def test_chain_requires_warm_rows(cfg):
+    with pytest.raises(AssertionError):
+        make_store(cfg.engram, "CXL+SSD",
+                   store_cfg=StoreConfig(cache_rows=8, warm_rows=0))
+
+
+def test_chain_without_front(cfg):
+    """cache_rows=0: a two-level CXL->SSD chain, no DRAM hits."""
+    st, cur = _chain(cfg.engram, StoreConfig(cache_rows=0, warm_rows=128))
+    _drive(st, cur, 8)
+    s = st.stats()
+    assert s.hits == 0 and s.warm_hits > 0 and s.cold_misses > 0
+
+
+def test_chain_replay_rebooks_identically(cfg):
+    """A recorded route replayed through ``Segments`` re-books every
+    link to the same charge — residency and sketch untouched."""
+    st, cur = _chain(cfg.engram)
+    routes = _drive(st, cur, 12)
+    st2, cur2 = _chain(cfg.engram)
+    for i, r in enumerate(routes):
+        cur2.advance_to(i * 1e-3)
+        cur2.next_wave()
+        h = st2.prefetch(Segments(r[0], r[1] + r[2], shards=r))
+        assert h.shards == r
+    assert len(st2._warm) == 0            # replay never touches residency
+    a, b = st.stats(), st2.stats()
+    assert (a.promotions, a.demotions) == (b.promotions, b.demotions)
+    assert a.class_bytes == b.class_bytes
+
+
+# ------------------------------------------------------------ hot-set shift
+
+
+def test_aging_recovers_from_hot_set_shift(cfg):
+    """After a rank permutation re-labels the hot set, the aged chain
+    re-places it (counts fade on the virtual clock) while the
+    never-forgetting control stays frozen on stale rows — the STRICT
+    promotion rule's intended failure mode."""
+    rng = np.random.default_rng(123)
+    perm = rng.permutation(2048).astype(np.int64)
+
+    def post_shift_hits(half_life):
+        scfg = dataclasses.replace(CHAIN_SCFG, aging_half_life_s=half_life)
+        st, cur = _chain(cfg.engram, scfg)
+        _drive(st, cur, 30)
+        routes = _drive(st, cur, 30, t0=30e-3, perm=perm)
+        tail = routes[-8:]
+        return sum(r[0] + r[1] for r in tail) / sum(r[0] + r[1] + r[2]
+                                                    for r in tail)
+
+    aged = post_shift_hits(4e-3)
+    frozen = post_shift_hits(0.0)
+    assert aged > frozen + 0.05
+
+
+# ------------------------------------------------------- placement solver
+
+
+def test_hit_fractions_sane():
+    pf, pw, pc = chain_hit_fractions(64, 192, 4096, 1.0)
+    assert pf > 0 and pw > 0 and pc > 0
+    assert pf + pw + pc == pytest.approx(1.0)
+    # hot head dominates under Zipf: 64 front rows out-hit the NEXT 192
+    assert pf > pw * 64 / 192
+    # degenerate splits
+    assert chain_hit_fractions(0, 0, 100, 1.0)[2] == pytest.approx(1.0)
+    all_front = chain_hit_fractions(100, 0, 100, 1.0)
+    assert all_front[0] == pytest.approx(1.0)
+
+
+def test_solver_matches_brute_force(cfg):
+    grid = dict(total_rows=4096, alpha=1.0, batch_tokens=64, step_s=2e-4,
+                front_grid=(0, 16, 64, 256, 1024),
+                warm_grid=(256, 1024, 2048, 4096),
+                layers=cfg.engram_layers(), n_layers=cfg.n_layers,
+                ttft_steps=2)
+    for tgt in (4.08e-4, 4.8e-4, 6e-4, 1e-3):
+        solver = plan_placement(cfg.engram, ttft_target_s=tgt, **grid)
+        brute = _best_plan(placement_sweep(cfg.engram, ttft_target_s=tgt,
+                                           **grid))
+        assert solver.split == brute.split
+        assert solver.feasible == brute.feasible
+        assert solver.cost_usd == pytest.approx(brute.cost_usd)
+
+
+def test_solver_prefers_flash_when_target_allows(cfg):
+    """With a lax TTFT target the min-cost split pushes capacity to the
+    cheapest $/GB tier (SSD); a tight target buys it back into DRAM+CXL."""
+    grid = dict(total_rows=4096, alpha=1.0, batch_tokens=64, step_s=2e-4,
+                front_grid=(0, 64, 1024), warm_grid=(512, 4096),
+                layers=cfg.engram_layers(), n_layers=cfg.n_layers,
+                ttft_steps=2)
+    lax = plan_placement(cfg.engram, ttft_target_s=1e-3, **grid)
+    tight = plan_placement(cfg.engram, ttft_target_s=4.08e-4, **grid)
+    assert lax.cold_rows > tight.cold_rows
+    assert lax.cost_usd < tight.cost_usd
+    assert lax.feasible and tight.feasible
+
+
+# ---------------------------------------------------------- trace replay
+
+
+def _serve_trace(cfg, params, *, fabric_nodes=None):
+    kw = {"fabric_nodes": fabric_nodes} if fabric_nodes else {}
+    rt = EngramRuntime(cfg, params=params, max_batch=2, max_len=32,
+                       prompt_bucket=8, pool="CXL+SSD",
+                       emulate_step_s=5e-5, **kw)
+    for r in range(4):
+        rt.submit([5 + r, 17, 42], max_new=4)
+    stats = rt.drain()
+    return rt.engine, stats
+
+
+@pytest.mark.parametrize("nodes", [None, 2])
+def test_chain_trace_replay_bit_identical(cfg, params, nodes):
+    """Engine-recorded chain traces — plain and sharded over a fabric —
+    replay through the simulator to the exact engine stall."""
+    eng, stats = _serve_trace(cfg, params, fabric_nodes=nodes)
+    ss = eng.store.stats()
+    assert ss.cold_misses > 0             # the chain actually went cold
+    pred = replay_stall_s(cfg.engram, "CXL+SSD", eng.scheduler.trace,
+                          layers=cfg.engram_layers(), n_layers=cfg.n_layers,
+                          store_cfg=cfg.engram.store, fabric_nodes=nodes)
+    assert pred == stats.stall_s
+
+
+# ------------------------------------------------- long-context idle spill
+
+
+def _long_ctx_drive(cfg, params, **kw):
+    rt = EngramRuntime(cfg, params=params, max_batch=2, max_len=64,
+                       prompt_bucket=8, pool="CXL",
+                       emulate_step_s=2e-4, **kw)
+    prompts = [[3, 17, 42, 9], [5, 11, 7], [2, 8, 20, 13, 4], [6, 9]]
+    hs = [rt.submit(p, max_new=12) for p in prompts]
+    rt.drain()
+    return rt, hs
+
+
+def test_idle_spill_bit_identical_streams(cfg, params):
+    """Long-decoded slots park their KV in the pool (no preemption
+    policy involved) when the queue outstrips free slots; the resumed
+    streams are bit-identical to the never-spilled control and every
+    spilled byte is restored."""
+    rt0, h0 = _long_ctx_drive(cfg, params)
+    rt1, h1 = _long_ctx_drive(cfg, params, idle_spill_tokens=4)
+    st = rt1.stats
+    assert st.idle_spills > 0
+    assert st.resumes == st.idle_spills   # every parked slot came back
+    assert st.kv_spill_bytes > 0
+    assert st.kv_restore_bytes == st.kv_spill_bytes
+    for a, b in zip(h0, h1):
+        assert a.request.out == b.request.out
+    # spilled requests ratcheted their mark; control saw no spills
+    assert rt0.stats.idle_spills == 0
+    assert any(h.request.spill_mark > 0 for h in h1)
+    # KV pool drained and the traffic hit the "kv" ledger class
+    kv = rt1.engine.kv_pool.stats()
+    assert kv.entries == 0
+    assert rt1.engine.store.stats().class_bytes["kv"] > 0
+
+
+def test_idle_spill_idle_queue_no_spill(cfg, params):
+    """No queued demand -> no parking: the threshold alone never spills."""
+    rt = EngramRuntime(cfg, params=params, max_batch=4, max_len=64,
+                       prompt_bucket=8, pool="CXL", emulate_step_s=2e-4,
+                       idle_spill_tokens=2)
+    hs = [rt.submit([3 + r, 17], max_new=10) for r in range(3)]
+    rt.drain()
+    assert rt.stats.idle_spills == 0
+    assert all(h.finished for h in hs)
+
+
+# ------------------------------------------------------- config plumbing
+
+
+def test_with_store_chain_knobs():
+    cfg = tiny_cfg()
+    out = with_store(cfg, cache_rows=16, warm_rows=128,
+                     aging_half_life_s=0.25)
+    assert out.engram.store.warm_rows == 128
+    assert out.engram.store.aging_half_life_s == 0.25
+    assert out.engram.store.cache_rows == 16
